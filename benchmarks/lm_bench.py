@@ -1,0 +1,48 @@
+"""LM substrate micro-benchmarks (reduced configs on CPU): train-step and
+decode-step latency per architecture family."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import (
+    decode_step, init_cache, loss_fn, make_params)
+from repro.parallel.inputs import make_concrete_batch
+
+FAMILIES = ["qwen2-0.5b", "deepseek-moe-16b", "xlstm-1.3b",
+            "recurrentgemma-2b"]
+
+
+def run(rows: list):
+    for arch in FAMILIES:
+        cfg = get_config(arch).reduced()
+        params = make_params(cfg, seed=0)
+        batch = make_concrete_batch(cfg, 2, 32)
+
+        grad_fn = jax.jit(jax.grad(
+            lambda p, b: loss_fn(cfg, p, b, q_chunk=16, rec_chunk=8)[0]))
+        g = grad_fn(params, batch)
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        jax.block_until_ready(grad_fn(params, batch))
+        dt = time.perf_counter() - t0
+        tokens = batch["tokens"].size
+        rows.append((f"lm_train_step_{arch}", dt * 1e6,
+                     f"{tokens / dt:.3g} tok/s (reduced cfg)"))
+
+        cache = init_cache(cfg, batch=2, seq_len=32,
+                           src_len=16 if cfg.is_encdec else 0)
+        dec = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+        tok = jnp.zeros((2, 1), jnp.int32)
+        out, cache2 = dec(params, tok, cache)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        jax.block_until_ready(dec(params, tok, cache)[0])
+        dt = time.perf_counter() - t0
+        rows.append((f"lm_decode_step_{arch}", dt * 1e6,
+                     f"{2 / dt:.3g} tok/s (reduced cfg)"))

@@ -1,0 +1,33 @@
+"""Benchmark harness — one entry per paper table/figure (census half) plus
+LM substrate micro-benchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="census benchmarks only")
+    args = ap.parse_args()
+
+    rows: list = []
+    from benchmarks import census_bench
+    census_bench.run(rows)
+    if not args.quick:
+        from benchmarks import lm_bench
+        lm_bench.run(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

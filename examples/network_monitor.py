@@ -1,0 +1,61 @@
+"""The paper's application (Figs 3–4): triadic monitoring of computer
+network traffic with anomaly alarms.
+
+Synthesizes background peer-to-peer traffic, injects a port-scanning burst
+(one source fanning out — 021D triads) in later windows, and shows the
+monitor flagging exactly those windows.
+
+    PYTHONPATH=src python examples/network_monitor.py
+"""
+
+import numpy as np
+
+from repro.core import SECURITY_PATTERNS, TriadMonitor
+
+
+def background_traffic(rng, n_hosts, n_edges):
+    # zipf-ish client/server mix with some reciprocity
+    src = (rng.zipf(1.5, n_edges) - 1) % n_hosts
+    dst = rng.integers(0, n_hosts, n_edges)
+    back = rng.random(n_edges) < 0.3
+    return (np.concatenate([src, dst[back]]),
+            np.concatenate([dst, src[back]]))
+
+
+def scan_burst(rng, n_hosts, n_targets):
+    scanner = int(rng.integers(0, n_hosts))
+    targets = rng.choice(n_hosts, size=n_targets, replace=False)
+    return np.full(n_targets, scanner), targets
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_hosts, per_window = 400, 1200
+    monitor = TriadMonitor(n_nodes=n_hosts, history=10, threshold=4.0)
+
+    attack_windows = {25, 26, 27}
+    for w in range(30):
+        src, dst = background_traffic(rng, n_hosts, per_window)
+        if w in attack_windows:
+            s2, d2 = scan_burst(rng, n_hosts, 150)
+            src, dst = np.concatenate([src, s2]), np.concatenate([dst, d2])
+        monitor.observe(src, dst)
+
+    alarms = monitor.alarms()
+    print(f"monitored {30} windows of {per_window} flows over "
+          f"{n_hosts} hosts; injected scans in windows "
+          f"{sorted(attack_windows)}\n")
+    print("patterns:", {k: v for k, v in SECURITY_PATTERNS.items()})
+    print("\nalarms:")
+    for a in alarms:
+        print(f"  window {a['window']:>2}  pattern={a['pattern']:<10} "
+              f"z={a['zscore']:.1f}")
+    flagged = {a["window"] for a in alarms}
+    hits = flagged & attack_windows
+    print(f"\ndetected {len(hits)}/{len(attack_windows)} attack windows"
+          f"{' ✓' if hits else ''}; "
+          f"false alarms: {sorted(flagged - attack_windows)}")
+
+
+if __name__ == "__main__":
+    main()

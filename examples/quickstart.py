@@ -1,0 +1,39 @@
+"""Quickstart: exact triad census of a scale-free digraph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    build_plan, census_bruteforce, census_dict, from_edges,
+    scale_free_digraph, triad_census)
+
+
+def main():
+    # a small scale-free graph (orkut-like mutual density)
+    g = scale_free_digraph(n=2_000, avg_degree=8, exponent=2.1,
+                           mutual_p=0.5, seed=42)
+    plan = build_plan(g)
+    print(f"graph: n={g.n} arcs={g.num_arcs} pairs={plan.num_pairs} "
+          f"work_items={plan.num_items} max_deg={plan.max_degree}")
+
+    census = triad_census(plan)
+    print("\n16-type triad census (Holland–Leinhardt order):")
+    for name, count in census_dict(census).items():
+        print(f"  {name:>5}: {count}")
+    total = g.n * (g.n - 1) * (g.n - 2) // 6
+    assert census.sum() == total
+    print(f"\nsum == C(n,3) == {total} ✓")
+
+    # validate on a small brute-forceable subgraph
+    sub = scale_free_digraph(n=60, avg_degree=6, exponent=2.1,
+                             mutual_p=0.5, seed=7)
+    from repro.core import to_dense
+    assert (triad_census(build_plan(sub)) ==
+            census_bruteforce(to_dense(sub))).all()
+    print("matches O(n^3) brute force on a 60-node graph ✓")
+
+
+if __name__ == "__main__":
+    main()

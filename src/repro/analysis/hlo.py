@@ -1,0 +1,154 @@
+"""HLO-text analysis: collective-communication bytes with correct
+while-loop (lax.scan) trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts a while body **once**; for the
+roofline's collective term we need bytes × trips. This parser builds the
+computation call graph from ``compiled.as_text()``, extracts trip counts
+from while-condition constants, and accumulates collective bytes
+recursively. It is a text-level estimator: per-op "bytes" is
+max(result, operands) shape size, a consistent proxy for link traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    collective_counts: dict = field(default_factory=lambda: defaultdict(int))
+    whiles: list = field(default_factory=list)     # (body, cond)
+    calls: list = field(default_factory=list)      # fusions / calls / branches
+    constants: list = field(default_factory=list)  # integer constants seen
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    # computation headers: `%name (params...) -> type {` — params may
+    # contain nested parens (tuple-typed while-body args), so match
+    # greedily up to the trailing `{`
+    header = re.compile(
+        r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = header.match(line)
+        if m and ("=" not in line.split("(")[0]):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None or not line or line == "}":
+            continue
+        # integer constants (trip-count candidates)
+        for c in re.finditer(r"constant\((\d+)\)", line):
+            cur.constants.append(int(c.group(1)))
+        # collective ops (count the -start of async pairs only once)
+        if "-done" not in line:
+            for kind in COLLECTIVE_KINDS:
+                if re.search(rf"\b{kind}(-start)?\(", line):
+                    lhs, _, rhs = line.partition("=")
+                    b = shape_bytes(line)
+                    cur.collective_bytes[kind] += b
+                    cur.collective_counts[kind] += 1
+                    break
+        # call graph edges
+        wm = re.search(r"while\(.*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)",
+                       line)
+        if not wm:
+            wm2 = re.search(
+                r"while\(.*body=%?([\w\.\-]+).*condition=%?([\w\.\-]+)", line)
+            if wm2:
+                cur.whiles.append((wm2.group(1), wm2.group(2)))
+        else:
+            cur.whiles.append((wm.group(2), wm.group(1)))
+        for cm in re.finditer(r"(?:calls|to_apply|branch_computations)="
+                              r"[{%]?\s*%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)",
+                              line):
+            for name in re.split(r",\s*%?", cm.group(1)):
+                cur.calls.append(name.strip("% {}"))
+    return comps
+
+
+def trip_count(comps: dict, cond_name: str, default: int = 1) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.constants:
+        return default
+    return max(cond.constants)
+
+
+def collective_summary(hlo: str) -> dict:
+    """Total collective bytes/counts with while-trip multiplication."""
+    comps = parse_computations(hlo)
+    entry = None
+    for name, c in comps.items():
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = c
+    if entry is None and comps:
+        entry = next(iter(comps.values()))
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, stack=()) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}, {}
+        c = comps[name]
+        by = defaultdict(int, c.collective_bytes)
+        ct = defaultdict(int, c.collective_counts)
+        for callee in c.calls:
+            sb, sc = total(callee, stack + (name,))
+            for k, v in sb.items():
+                by[k] += v
+            for k, v in sc.items():
+                ct[k] += v
+        for body, cond in c.whiles:
+            trips = trip_count(comps, cond)
+            sb, sc = total(body, stack + (name,))
+            for k, v in sb.items():
+                by[k] += v * trips
+            for k, v in sc.items():
+                ct[k] += v * trips
+        memo[name] = (dict(by), dict(ct))
+        return memo[name]
+
+    by, ct = total(entry.name) if entry else ({}, {})
+    return {
+        "bytes_by_kind": by,
+        "counts_by_kind": ct,
+        "total_bytes": sum(by.values()),
+        "total_count": sum(ct.values()),
+    }

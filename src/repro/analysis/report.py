@@ -1,0 +1,170 @@
+"""Generate EXPERIMENTS.md sections (§Dry-run, §Roofline) from the
+dry-run JSON records. §Perf iterations are appended by hand during the
+hillclimb (hypothesis → change → measure → validate logs).
+
+    PYTHONPATH=src python -m repro.analysis.report
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+from repro.analysis.roofline import (
+    analyze_record, fmt_seconds, load_records, markdown_table)
+
+ROOT = Path(__file__).resolve().parents[3]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def dryrun_section(records: list[dict]) -> str:
+    ok = [r for r in records if r.get("status") == "ok"]
+    bad = [r for r in records if r.get("status") != "ok"]
+    lines = [
+        "## §Dry-run",
+        "",
+        f"{len(ok)} / {len(records)} (arch × shape × mesh) cells lower + "
+        "compile successfully (SPMD partitioning on 256- and 512-device "
+        "meshes; XLA CPU backend with "
+        "`--xla_force_host_platform_device_count=512`).",
+        "",
+        "| arch | shape | mesh | compile s | args/dev | temp/dev | "
+        "collective bytes/dev/step (trip-corrected) | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r["memory"]
+        coll = r["collectives"]
+        top = ", ".join(
+            f"{k}×{v}" for k, v in sorted(
+                coll["counts_by_kind"].items(),
+                key=lambda kv: -coll["bytes_by_kind"].get(kv[0], 0))[:3])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_seconds', '?')} | "
+            f"{mem['argument_bytes'] / 1e9:.2f} GB | "
+            f"{mem['temp_bytes'] / 1e9:.2f} GB | "
+            f"{coll['total_bytes'] / 1e9:.2f} GB | {top} |")
+    if bad:
+        lines += ["", "Failures:", ""]
+        for r in bad:
+            lines.append(f"* {r['arch']} × {r['shape']} × {r['mesh']}: "
+                         f"`{r.get('error', '?')[:200]}`")
+    lines += [
+        "",
+        "Skipped by design (DESIGN.md §5): `long_500k` for the 8 pure "
+        "full-attention archs (quadratic attention at 524k context is "
+        "architecturally excluded; run for xlstm-1.3b and "
+        "recurrentgemma-2b).",
+    ]
+    return "\n".join(lines)
+
+
+def roofline_section(records: list[dict]) -> str:
+    rows = [analyze_record(r) for r in records]
+    rows = [r for r in rows if r is not None]
+    rows.sort(key=lambda r: (r.mesh, r.arch, r.shape))
+    pod = [r for r in rows if r.mesh == "16x16"]
+    dom = Counter(r.dominant for r in pod)
+    lines = [
+        "## §Roofline",
+        "",
+        "Terms per the brief (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI):",
+        "",
+        "* `compute = HLO_FLOPs / (chips × peak)` — FLOPs from the "
+        "unrolled lowering (scan-free, exact; ×4/3 for train remat).",
+        "* `memory = HBM_bytes / (chips × bw)` — analytic traffic model "
+        "(weights + optimizer + activation streams + KV/state caches); "
+        "pre-fusion HLO byte counts are kept in the JSON as a cross-check "
+        "but overstate traffic ~10×.",
+        "* `collective = bytes / (chips × link_bw)` — compiled SPMD "
+        "collectives, while-loop trip-count corrected "
+        "(`repro.analysis.hlo`).",
+        "",
+        "`MF/HLO` = MODEL_FLOPS / HLO_FLOPs with MODEL_FLOPS = 6·N_active·D "
+        "(train) or 2·N_active·D (serve); the gap below 1.0 is attention "
+        "quadratic work + GQA/MoE overheads, above ~1.0 would flag lost "
+        "useful work. `roofline frac` = ideal useful-compute time / "
+        "dominant-term time — the score we hillclimb in §Perf.",
+        "",
+        f"Dominant-term census over single-pod cells: "
+        + ", ".join(f"{k}: {v}" for k, v in dom.most_common()),
+        "",
+        "### Single pod (16×16 = 256 chips)",
+        "",
+        markdown_table([r for r in rows if r.mesh == "16x16"]),
+        "",
+        "### Multi-pod (2×16×16 = 512 chips; DP over `pod`)",
+        "",
+        markdown_table([r for r in rows if r.mesh == "2x16x16"]),
+        "",
+        "### Per-cell bottleneck notes (single pod)",
+        "",
+    ]
+    for r in pod:
+        lines.append(
+            f"* **{r.arch} × {r.shape}** — dominant: {r.dominant} "
+            f"({fmt_seconds(r.step_time_s)}/step). {r.note}.")
+    return "\n".join(lines)
+
+
+def variants_section() -> str:
+    vdir = ROOT / "experiments" / "variants"
+    if not vdir.exists():
+        return ""
+    recs = [r for r in load_records(vdir) if r.get("status") == "ok"]
+    if not recs:
+        return ""
+    lines = [
+        "### §Perf variant measurements (iteration log below)",
+        "",
+        "| arch | shape | variant | compute | memory | collective | "
+        "dominant | frac | temp/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        row = analyze_record(rec)
+        if row is None:
+            continue
+        lines.append(
+            f"| {row.arch} | {row.shape} | {rec.get('variant', '?')} | "
+            f"{fmt_seconds(row.compute_s)} | {fmt_seconds(row.memory_s)} |"
+            f" {fmt_seconds(row.collective_s)} | {row.dominant} | "
+            f"{row.roofline_frac:.1%} | {row.temp_gb:.1f} GB | "
+            f"{'✓' if row.fits else '✗'} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    records = load_records(DRYRUN)
+    out = [
+        "# EXPERIMENTS",
+        "",
+        "Artifacts: `experiments/dryrun/*.json` (one per cell), "
+        "`experiments/variants/*.json` (§Perf iterations), "
+        "`benchmarks/run.py` CSV (`bench_output.txt`), "
+        "`tests/` (`test_output.txt`). Hardware target: TPU v5e pods "
+        "(16×16 per pod); host: 1-core CPU container (compile-only "
+        "dry-runs, interpret-mode kernels).",
+        "",
+        dryrun_section(records),
+        "",
+        roofline_section(records),
+        "",
+        variants_section(),
+    ]
+    perf = ROOT / "experiments" / "PERF_LOG.md"
+    if perf.exists():
+        out.append(perf.read_text())
+    paper = ROOT / "experiments" / "PAPER_VALIDATION.md"
+    if paper.exists():
+        out.append(paper.read_text())
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(out))
+    print(f"wrote EXPERIMENTS.md with {len(records)} records")
+
+
+if __name__ == "__main__":
+    main()

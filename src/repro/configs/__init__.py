@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    ArchConfig, ShapeSpec, SHAPES, all_configs, get_config, shapes_for)
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "all_configs",
+           "get_config", "shapes_for"]

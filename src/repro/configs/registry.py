@@ -1,0 +1,11 @@
+"""Import every architecture config so registration side effects run."""
+import repro.configs.nemotron_4_15b     # noqa: F401
+import repro.configs.qwen2_0_5b         # noqa: F401
+import repro.configs.qwen2_5_32b        # noqa: F401
+import repro.configs.stablelm_12b       # noqa: F401
+import repro.configs.xlstm_1_3b         # noqa: F401
+import repro.configs.seamless_m4t_medium  # noqa: F401
+import repro.configs.qwen2_vl_2b        # noqa: F401
+import repro.configs.granite_moe_3b_a800m  # noqa: F401
+import repro.configs.deepseek_moe_16b   # noqa: F401
+import repro.configs.recurrentgemma_2b  # noqa: F401

@@ -1,0 +1,32 @@
+"""Parallel triad census — the paper's contribution, TPU-native in JAX.
+
+Public API::
+
+    g = from_edges(src, dst, n)                 # paper Fig 7 structure
+    plan = build_plan(g, pad_to=num_devices)    # manhattan-collapse plan
+    census = triad_census(plan)                 # single device
+    census = triad_census_distributed(plan, mesh)   # sharded + psum
+"""
+
+from repro.core.digraph import CompactDigraph, from_edges, from_dense, to_dense
+from repro.core.planner import CensusPlan, build_plan
+from repro.core.census import triad_census, assemble_census
+from repro.core.distributed import (
+    triad_census_distributed, triad_census_graph, default_mesh)
+from repro.core.census_ref import (
+    census_bruteforce, census_batagelj_mrvar, census_dict)
+from repro.core.tricode import (
+    TRIAD_NAMES, TRICODE_TO_CLASS, FOLD_64_TO_16, NUM_CLASSES)
+from repro.core.generators import (
+    scale_free_digraph, paper_workload, erdos_renyi_digraph, PAPER_WORKLOADS)
+from repro.core.temporal import TriadMonitor, SECURITY_PATTERNS
+
+__all__ = [
+    "CompactDigraph", "from_edges", "from_dense", "to_dense",
+    "CensusPlan", "build_plan", "triad_census", "assemble_census",
+    "triad_census_distributed", "triad_census_graph", "default_mesh",
+    "census_bruteforce", "census_batagelj_mrvar", "census_dict",
+    "TRIAD_NAMES", "TRICODE_TO_CLASS", "FOLD_64_TO_16", "NUM_CLASSES",
+    "scale_free_digraph", "paper_workload", "erdos_renyi_digraph",
+    "PAPER_WORKLOADS", "TriadMonitor", "SECURITY_PATTERNS",
+]

@@ -1,0 +1,126 @@
+"""Compact directed-graph structure (paper Fig 7).
+
+Compressed sparse row over the *symmetrized* adjacency: each unordered
+adjacent pair {u, w} contributes one entry to u's row and one to w's row.
+An entry packs ``(neighbor_id << 2) | dir_code`` where the 2-bit dir code is
+relative to the row owner ``u``::
+
+    bit 0: u -> w  ("01" unidirectional current -> neighbor)
+    bit 1: w -> u  ("10" unidirectional neighbor -> current)
+    "11": bidirectional
+
+Rows are sorted by neighbor id (packing preserves order: id occupies the
+high bits), enabling binary search — exactly the paper's layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.tricode import swap_code
+
+
+@dataclass(frozen=True)
+class CompactDigraph:
+    """CSR-with-direction-bits graph container (host-side, numpy)."""
+
+    n: int                     #: number of vertices
+    indptr: np.ndarray         #: (n+1,) int64 row offsets
+    packed: np.ndarray         #: (2*pairs,) int32 ``(nbr << 2) | code``
+    num_arcs: int              #: directed edge count (after dedup)
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def num_pairs(self) -> int:
+        """Number of unordered adjacent pairs (undirected edges)."""
+        return self.packed.shape[0] // 2
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.packed[self.indptr[u]:self.indptr[u + 1]] >> 2
+
+    def codes(self, u: int) -> np.ndarray:
+        return self.packed[self.indptr[u]:self.indptr[u + 1]] & 3
+
+    def validate(self) -> None:
+        deg = self.degrees
+        assert (deg >= 0).all() and self.indptr[-1] == self.packed.shape[0]
+        nbr = self.packed >> 2
+        # rows sorted strictly (no duplicate neighbors within a row)
+        for u in range(self.n):
+            row = nbr[self.indptr[u]:self.indptr[u + 1]]
+            assert (np.diff(row) > 0).all(), f"row {u} not strictly sorted"
+        assert ((self.packed & 3) != 0).all(), "zero dir code"
+
+
+def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
+    """Build the compact structure from directed edge arrays.
+
+    Self-loops are dropped and duplicate directed edges deduplicated,
+    matching the paper's preprocessing of the raw edge lists.
+    """
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if src.shape != dst.shape:
+        raise ValueError("src/dst length mismatch")
+    if n is None:
+        n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
+    if src.size and (src.min() < 0 or dst.min() < 0
+                     or max(src.max(), dst.max()) >= n):
+        raise ValueError("vertex id out of range")
+
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    # dedupe directed edges
+    eid = src * n + dst
+    eid = np.unique(eid)
+    src, dst = eid // n, eid % n
+    num_arcs = src.shape[0]
+
+    # unordered pair key + the bit this arc sets on the (lo, hi) pair code
+    lo, hi = np.minimum(src, dst), np.maximum(src, dst)
+    pkey = lo * n + hi
+    bit = np.where(src < dst, 1, 2).astype(np.int64)   # 1: lo->hi, 2: hi->lo
+    order = np.argsort(pkey, kind="stable")
+    pkey, bit = pkey[order], bit[order]
+    uniq, start = np.unique(pkey, return_index=True)
+    # OR the bits per pair (bits are distinct per directed edge after dedup)
+    code = np.bitwise_or.reduceat(bit, start) if uniq.size else bit[:0]
+    plo, phi = uniq // n, uniq % n
+
+    # each pair emits two CSR entries: (plo: phi, code) and (phi: plo, swap)
+    rows = np.concatenate([plo, phi])
+    nbrs = np.concatenate([phi, plo])
+    codes = np.concatenate([code, swap_code(code)])
+
+    deg = np.bincount(rows, minlength=n).astype(np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    order = np.lexsort((nbrs, rows))
+    packed = ((nbrs[order] << 2) | codes[order]).astype(np.int64)
+    if packed.size and packed.max() >= 2**31:
+        raise ValueError("graph too large for int32 packing; need n < 2^29")
+    return CompactDigraph(n=int(n), indptr=indptr,
+                          packed=packed.astype(np.int32),
+                          num_arcs=int(num_arcs))
+
+
+def from_dense(a: np.ndarray) -> CompactDigraph:
+    """Build from a dense boolean adjacency matrix (tests / tiny graphs)."""
+    a = np.asarray(a, dtype=bool).copy()
+    np.fill_diagonal(a, False)
+    src, dst = np.nonzero(a)
+    return from_edges(src, dst, n=a.shape[0])
+
+
+def to_dense(g: CompactDigraph) -> np.ndarray:
+    a = np.zeros((g.n, g.n), dtype=bool)
+    for u in range(g.n):
+        nb, cd = g.neighbors(u), g.codes(u)
+        a[u, nb[(cd & 1) != 0]] = True
+        a[nb[(cd & 2) != 0], u] = True
+    return a

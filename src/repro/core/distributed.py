@@ -1,0 +1,98 @@
+"""Distributed triad census: shard_map over a device mesh.
+
+The flat work plan is split into equal chunks across every device of the
+mesh (all axes flattened); each device computes its privatized 64-bin
+tricode histogram + 2-bin intersection counters, and a single ``psum``
+combines them — the paper's 64 hashed local census vectors, mapped onto the
+memory hierarchy of a pod: device-local partials in HBM/VMEM, one collective
+at the end.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.census import assemble_census, census_partials
+from repro.core.planner import CensusPlan, build_plan
+from repro.core.digraph import CompactDigraph
+
+
+def default_mesh() -> Mesh:
+    """Flat mesh over all local devices."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("devices",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "search_iters", "backend"))
+def _sharded_census(indptr, packed, pair_u, pair_v, pair_code,
+                    item_pair, item_slot, item_side, item_valid,
+                    mesh, search_iters, backend):
+    axes = mesh.axis_names
+    histogram_fn = None
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        histogram_fn = kops.tricode_histogram
+
+    def shard_fn(ip, pk, pu, pv, pc, wpair, wslot, wside, wvalid):
+        hist64, inter = census_partials(
+            ip, pk, pu, pv, pc, wpair, wslot, wside, wvalid,
+            search_iters, histogram_fn=histogram_fn)
+        hist64 = jax.lax.psum(hist64, axes)
+        inter = jax.lax.psum(inter, axes)
+        return hist64, inter
+
+    item_spec = P(axes)       # work items sharded over every mesh axis
+    rep = P()                 # graph + pair arrays replicated
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(rep, rep, rep, rep, rep,
+                  item_spec, item_spec, item_spec, item_spec),
+        out_specs=(rep, rep))
+    return fn(indptr, packed, pair_u, pair_v, pair_code,
+              item_pair, item_slot, item_side, item_valid)
+
+
+def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
+                             backend: str = "jnp") -> np.ndarray:
+    """Exact 16-type census computed across all devices of ``mesh``."""
+    if mesh is None:
+        mesh = default_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    if plan.item_valid.shape[0] % ndev != 0:
+        raise ValueError(
+            f"plan padded to {plan.item_valid.shape[0]} items, not a "
+            f"multiple of {ndev} devices; build with pad_to=num_devices")
+    if plan.num_pairs == 0:
+        n = plan.n
+        out = np.zeros(16, dtype=np.int64)
+        out[0] = n * (n - 1) * (n - 2) // 6
+        return out
+    sharding = NamedSharding(mesh, P(mesh.axis_names))
+    rep = NamedSharding(mesh, P())
+    dev = lambda a, s: jax.device_put(jnp.asarray(a), s)
+    hist64, inter = _sharded_census(
+        dev(plan.indptr, rep), dev(plan.packed, rep),
+        dev(plan.pair_u, rep), dev(plan.pair_v, rep),
+        dev(plan.pair_code, rep),
+        dev(plan.item_pair, sharding), dev(plan.item_slot, sharding),
+        dev(plan.item_side, sharding), dev(plan.item_valid, sharding),
+        mesh, plan.search_iters, backend)
+    return assemble_census(plan, np.asarray(hist64), np.asarray(inter))
+
+
+def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
+                       backend: str = "jnp") -> np.ndarray:
+    """Convenience: plan + distribute + count in one call."""
+    if mesh is None:
+        mesh = default_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    plan = build_plan(g, pad_to=ndev)
+    return triad_census_distributed(plan, mesh=mesh, backend=backend)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the census hot spots (validated in interpret mode).
+
+* ``tricode_hist`` — fused tricode -> 64-bin census histogram (the paper's
+  contended census-vector increment, made contention-free).
+* ``pair_codes`` — blocked sorted-row membership + in-situ 2-bit direction
+  code extraction (the paper's Fig 8 pointer merge, vectorized).
+"""
+
+from repro.kernels.ops import (
+    pair_codes, pair_codes_ref, tricode_histogram, tricode_histogram_ref)
+
+__all__ = ["pair_codes", "pair_codes_ref",
+           "tricode_histogram", "tricode_histogram_ref"]

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels are written for TPU
+BlockSpec tiling but validated on CPU via the Pallas interpreter, per the
+project contract).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.tricode_hist import (
+    BLOCK_ITEMS, tricode_histogram_kernel)
+from repro.kernels.pair_codes import LANES, TILE_B, pair_codes_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tricode_histogram(tricode: jax.Array, mask: jax.Array,
+                      interpret: bool | None = None) -> jax.Array:
+    """64-bin histogram of ``tricode`` where ``mask`` is set.
+
+    Drop-in replacement for the scatter-add path in
+    :func:`repro.core.census.census_partials`.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    w = tricode.shape[0]
+    masked = jnp.where(mask, tricode, 64).astype(jnp.int32)
+    pad = (-w) % BLOCK_ITEMS
+    if pad:
+        masked = jnp.concatenate(
+            [masked, jnp.full((pad,), 64, jnp.int32)])
+    return tricode_histogram_kernel(masked, interpret=interpret)
+
+
+def pair_codes(q: jax.Array, k: jax.Array, kc: jax.Array,
+               interpret: bool | None = None) -> jax.Array:
+    """Matched-key codes for (B, 128) tiles; pads B to the kernel tile."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b = q.shape[0]
+    pad = (-b) % TILE_B
+    if pad:
+        zq = jnp.full((pad, LANES), -1, jnp.int32)
+        zk = jnp.full((pad, LANES), -2, jnp.int32)
+        zc = jnp.zeros((pad, LANES), jnp.int32)
+        q = jnp.concatenate([q, zq])
+        k = jnp.concatenate([k, zk])
+        kc = jnp.concatenate([kc, zc])
+    out = pair_codes_kernel(q, k, kc, interpret=interpret)
+    return out[:b]
+
+
+# re-export oracles for test symmetry
+tricode_histogram_ref = ref.tricode_histogram_ref
+pair_codes_ref = ref.pair_codes_ref

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tricode_histogram_ref(tricode_masked: jax.Array) -> jax.Array:
+    """64-bin histogram; values outside [0, 64) are dropped."""
+    valid = (tricode_masked >= 0) & (tricode_masked < 64)
+    return jnp.zeros(64, jnp.int32).at[
+        jnp.where(valid, tricode_masked, 0)
+    ].add(valid.astype(jnp.int32))
+
+
+def pair_codes_ref(q: jax.Array, k: jax.Array, kc: jax.Array) -> jax.Array:
+    """Per-query matched key code (0 if the id is absent from the row)."""
+    eq = q[:, :, None] == k[:, None, :]
+    return jnp.sum(jnp.where(eq, kc[:, None, :], 0), axis=2).astype(jnp.int32)

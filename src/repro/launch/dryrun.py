@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+* the main compile (scanned layers) — proves the sharding config is
+  coherent, records ``memory_analysis`` (fits-per-device) and the
+  trip-count-corrected collective schedule;
+* a cost reconstruction — XLA counts scan bodies once, so HLO FLOPs/bytes
+  are rebuilt either from a fully unrolled variant (small archs, exact) or
+  from outer/period compiles: ``outer + reps × (period − outer)``;
+* a JSON record per cell under ``experiments/dryrun/`` consumed by the
+  roofline analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.analysis.hlo import collective_summary
+from repro.configs import SHAPES, all_configs, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (
+    count_params, decode_step, serve_prefill, make_abstract_params,
+    params_axes)
+from repro.parallel.inputs import decode_inputs, train_batch_specs
+from repro.parallel.sharding import (
+    make_activation_sharder, moe_dispatch_plan, tree_shardings)
+from repro.train.optimizer import OptConfig, init_state
+from repro.train.train_loop import build_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(ma):
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "generated_code_bytes": ma.generated_code_size_in_bytes,
+    }
+
+
+def _cost_dict(ca):
+    if ca is None:
+        return {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def _compile(step_fn, in_shardings, args, lower_only: bool = False):
+    t0 = time.time()
+    jitted = jax.jit(step_fn, in_shardings=in_shardings)
+    lowered = jitted.lower(*args)
+    if lower_only:
+        return lowered, time.time() - t0
+    compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def _lower_train(cfg, shape, mesh, *, num_layers=None, scan_layers=True,
+                 rec_unroll=False, q_chunk=512, seq_shard=True, rules=None,
+                 remat=True, lower_only=False, grad_accum=1,
+                 moe_impl="gspmd"):
+    step, shardings, abstract = build_train_step(
+        cfg, mesh, shape, OptConfig(), num_layers=num_layers,
+        scan_layers=scan_layers, rec_unroll=rec_unroll, q_chunk=q_chunk,
+        seq_shard=seq_shard, rules=rules, remat=remat,
+        grad_accum=grad_accum, moe_impl=moe_impl)
+    batch_abs, batch_shard = train_batch_specs(cfg, shape, mesh)
+    return _compile(
+        step, (shardings["params"], shardings["opt"], batch_shard),
+        (abstract["params"], abstract["opt"], batch_abs),
+        lower_only=lower_only)
+
+
+def _lower_prefill(cfg, shape, mesh, *, num_layers=None, scan_layers=True,
+                   rec_unroll=False, q_chunk=512, seq_shard=True,
+                   rules=None, remat=True, lower_only=False,
+                   moe_impl="gspmd"):
+    sharder = make_activation_sharder(mesh, shape.global_batch,
+                                      shape.seq_len, seq_shard=seq_shard)
+    moe_groups, moe_gsh, ep_sharder = moe_dispatch_plan(
+        cfg, mesh, shape.global_batch, shape.seq_len, seq_shard)
+    moe_fn = None
+    if cfg.is_moe and moe_impl == "shard_map":
+        from repro.models.moe import moe_schema
+        from repro.models.moe_shard import make_sharded_moe
+        from repro.parallel.sharding import batch_axes, spec_for_axes
+        schema = moe_schema(cfg)
+        specs = {k: spec_for_axes(d.axes, d.shape, mesh)
+                 for k, d in schema.items()}
+        moe_fn = make_sharded_moe(
+            cfg, mesh, batch_axes(mesh, shape.global_batch), specs)
+
+    def step(params, batch):
+        return serve_prefill(cfg, params, batch, q_chunk=q_chunk,
+                             num_layers=num_layers, sharder=sharder,
+                             scan_layers=scan_layers,
+                             rec_unroll=rec_unroll,
+                             moe_groups=moe_groups,
+                             ep_sharder=ep_sharder,
+                             moe_group_sharder=moe_gsh,
+                             moe_fn=moe_fn)
+
+    abs_params = make_abstract_params(cfg, num_layers)
+    p_shard = tree_shardings(params_axes(cfg, num_layers), abs_params,
+                             mesh, rules)
+    batch_abs, batch_shard = train_batch_specs(cfg, shape, mesh)
+    batch_abs.pop("labels")
+    batch_shard.pop("labels")
+    return _compile(step, (p_shard, batch_shard), (abs_params, batch_abs),
+                    lower_only=lower_only)
+
+
+def _lower_decode(cfg, shape, mesh, *, num_layers=None, rules=None,
+                  lower_only=False, kv_quant=False, **_ignored):
+    def step(params, token, cache):
+        return decode_step(cfg, params, token, cache,
+                           num_layers=num_layers)
+
+    abs_params = make_abstract_params(cfg, num_layers)
+    p_shard = tree_shardings(params_axes(cfg, num_layers), abs_params,
+                             mesh, rules)
+    token, cache, sh = decode_inputs(cfg, shape, mesh, kv_quant=kv_quant)
+    return _compile(step, (p_shard, sh["token"], sh["cache"]),
+                    (abs_params, token, cache), lower_only=lower_only)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, q_chunk: int = 512, seq_shard: bool = True,
+             rules=None, variant: str = "baseline",
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(np.prod(mesh.devices.shape))
+    kind = shape.kind
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": ndev,
+        "variant": variant,
+        "params": count_params(cfg),
+        "active_params": count_params(cfg, active_only=True),
+        "timestamp": time.time(),
+    }
+
+    lower_map = {
+        "train": _lower_train, "prefill": _lower_prefill,
+        "decode": _lower_decode,
+    }
+    # long sequences: bigger q chunks keep the unrolled-chunk count (and
+    # hence compile time) bounded; memory stays sharded per-device
+    q_main = 2048 if shape.seq_len >= 32_768 else q_chunk
+    # MoE: keep the token layout purely data-sharded so dispatch groups
+    # align with device shards (no GSPMD relayout of the scatter chain)
+    if cfg.is_moe:
+        seq_shard = False
+    kwargs = {} if kind == "decode" else dict(
+        q_chunk=q_main, seq_shard=seq_shard)
+    main_kwargs = dict(kwargs)
+    if cfg.is_moe and kind == "train":
+        # microbatch the dispatch transients under the 16 GB budget
+        main_kwargs["grad_accum"] = 4
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+        if "seq_shard" in overrides and kind != "decode":
+            main_kwargs["seq_shard"] = overrides["seq_shard"]
+            kwargs["seq_shard"] = overrides["seq_shard"]
+        for key in ("grad_accum", "moe_impl", "kv_quant", "q_chunk"):
+            if key in overrides:
+                main_kwargs[key] = overrides[key]
+    compiled, dt = lower_map[kind](cfg, shape, mesh, rules=rules,
+                                   **main_kwargs)
+    rec["compile_seconds"] = round(dt, 1)
+    rec["memory"] = _mem_dict(compiled.memory_analysis())
+    rec["cost_raw"] = _cost_dict(compiled.cost_analysis())
+    coll = collective_summary(compiled.as_text())
+    rec["collectives"] = coll
+
+    # ---- cost reconstruction (scan bodies are cost-counted once by XLA)
+    if kind == "decode":
+        # decode path is fully unrolled -> compiled cost already exact
+        rec["cost_corrected"] = dict(rec["cost_raw"],
+                                     collective_bytes=coll["total_bytes"])
+        rec["cost_method"] = "compiled-unrolled(decode)"
+        rec["cost_scope"] = "per_device"
+    else:
+        # exact algorithmic cost: fully unrolled, remat off, LOWER ONLY
+        # (pre-partitioning HLO -> global flops/bytes; no expensive
+        # compile). Attention FLOPs are invariant to q chunking, so the
+        # cost trace uses one full-sequence chunk to stay small.
+        kwargs_cost = dict(kwargs, q_chunk=shape.seq_len)
+        lowered, dt2 = lower_map[kind](
+            cfg, shape, mesh, rules=rules, scan_layers=False,
+            rec_unroll=True, remat=False, lower_only=True, **kwargs_cost)
+        cc = _cost_dict(lowered.cost_analysis())
+        cc["collective_bytes"] = coll["total_bytes"] * ndev  # global-ize
+        rec["cost_corrected"] = cc
+        rec["cost_method"] = "lowered-unrolled"
+        rec["cost_scope"] = "global"
+        rec["lower_seconds_cost"] = round(dt2, 1)
+    return rec
+
+
+def cell_list(archs=None):
+    cells = []
+    for arch, cfg in sorted(all_configs().items()):
+        if archs and arch not in archs:
+            continue
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    cells = cell_list(args.arch)
+    if args.shape:
+        cells = [c for c in cells if c[1] in args.shape]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = out / f"{tag}.json"
+            if path.exists() and not args.force:
+                print(f"[skip] {tag}")
+                continue
+            print(f"[run ] {tag}", flush=True)
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape, mp)
+                rec["status"] = "ok"
+            except Exception as e:  # noqa: BLE001 — record the failure
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+            rec["wall_seconds"] = round(time.time() - t0, 1)
+            path.write_text(json.dumps(rec, indent=2, default=str))
+            print(f"       {rec['status']} in {rec['wall_seconds']}s",
+                  flush=True)
+            results.append(rec)
+    ok = sum(r["status"] == "ok" for r in results)
+    print(f"done: {ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Production serving launcher: batched generation via ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --reduced --batch 4 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=3,
+                    help="number of batched request rounds")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models.model import make_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = make_params(cfg, seed=0)
+    eng = ServeEngine(cfg, params,
+                      max_seq_len=args.prompt_len + args.new_tokens + 8,
+                      q_chunk=16)
+    rng = np.random.default_rng(0)
+    total, t0 = 0, time.time()
+    for r in range(args.requests):
+        prompts = rng.integers(
+            0, cfg.vocab_size,
+            (args.batch, args.prompt_len)).astype(np.int32)
+        src = (rng.normal(size=(args.batch, args.prompt_len, cfg.d_model))
+               .astype(np.float32) if cfg.is_encdec else None)
+        out = eng.generate(prompts, max_new_tokens=args.new_tokens,
+                           temperature=args.temperature, seed=r,
+                           src_embeds=src)
+        total += out[:, args.prompt_len:].size
+        print(f"request {r}: generated {out.shape} "
+              f"(first row tail: {out[0, -8:].tolist()})")
+    dt = time.time() - t0
+    print(f"{total} tokens in {dt:.1f}s = {total / dt:.1f} tok/s "
+          f"(incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""GQA attention: RoPE/M-RoPE, QKV bias, local windows, chunked compute,
+KV-cache decode with sequence-parallel partial-softmax merge (via GSPMD).
+
+Memory policy: prefill/train attention is computed in *unrolled* query
+chunks (python loop, static slices) so (a) peak score memory is bounded by
+``q_chunk`` and (b) XLA's cost analysis counts every chunk — a deliberate
+choice over ``lax.scan``, whose body is cost-counted once (DESIGN.md §4).
+For local attention the chunking also bounds FLOPs: each query chunk only
+attends to its static ``[start - window, end)`` key slice, making the
+compute genuinely sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamDef, apply_mrope, apply_rope
+
+NEG_INF = -2.0e38
+
+
+def attn_schema(cfg, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    s = {
+        "wq": ParamDef((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((hq, hd), ("heads", "head_dim"), "zeros")
+        s["bk"] = ParamDef((hkv, hd), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamDef((hkv, hd), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def _project_qkv(cfg, p, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return q, k, v
+
+
+def _positions(cfg, batch, cache=None):
+    if cache is not None:
+        pos = cache["pos"]
+        return jnp.full((batch, 1), pos, jnp.int32)
+    return None  # caller provides train positions
+
+
+def _rope(cfg, x, positions):
+    if cfg.rope_variant == "none" or positions is None:
+        return x
+    if cfg.rope_variant == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _iota_mask(lo: int, hi: int, k_lo: int, k_hi: int, causal: bool,
+               window: int = 0):
+    """Mask via broadcasted_iota — NEVER a concrete numpy constant (a
+    32k×32k bool constant embedded in the IR costs 1 GB of host RAM at
+    trace time; iota costs nothing)."""
+    rows, cols = hi - lo, k_hi - k_lo
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) + lo
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1) + k_lo
+    if not causal:
+        return jnp.ones((rows, cols), bool)
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def _chunked_scores_softmax(q, k, v, causal: bool, q_chunk: int):
+    """Unrolled-chunk softmax attention.
+
+    q: (B, Sq, Hkv, G, D); k, v: (B, Skv, Hkv, D).
+    """
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    outs = []
+    for lo in range(0, sq, q_chunk):
+        hi = min(lo + q_chunk, sq)
+        qc = q[:, lo:hi]
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qc, k) * scale
+        m = _iota_mask(lo, hi, 0, skv, causal)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        p = p.astype(v.dtype)
+        outs.append(jnp.einsum("bkgqs,bskd->bqkgd", p, v))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _local_chunked(q, k, v, window: int, q_chunk: int):
+    """Banded local attention: each q chunk sees a static key slice of
+    length (window + chunk); compute is O(S·window), not O(S²)."""
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    outs = []
+    for lo in range(0, sq, q_chunk):
+        hi = min(lo + q_chunk, sq)
+        k_lo = max(0, hi - q_chunk - window + 1)
+        kc = k[:, k_lo:hi]
+        vc = v[:, k_lo:hi]
+        qc = q[:, lo:hi]
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc) * scale
+        m = _iota_mask(lo, hi, k_lo, hi, True, window)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(vc.dtype)
+        outs.append(jnp.einsum("bkgqs,bskd->bqkgd", p, vc))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(cfg, p, x, *, positions=None, layer_window: int = 0,
+              causal: bool = True, xkv=None, q_chunk: int = 512,
+              kv_positions=None):
+    """Full-sequence (train / prefill / encoder) attention."""
+    b, s, _ = x.shape
+    xkv = x if xkv is None else xkv
+    skv = xkv.shape[1]
+    q, k, v = _project_qkv(cfg, p, x, xkv)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, kv_positions if kv_positions is not None else
+              (positions if xkv is x else None))
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    q = q.reshape(b, s, hkv, g, cfg.head_dim)
+
+    if layer_window and causal:
+        o = _local_chunked(q, k, v, layer_window, min(q_chunk, s))
+    else:
+        o = _chunked_scores_softmax(q, k, v, causal, min(q_chunk, s))
+    o = o.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, layer_window: int,
+                  dtype=jnp.bfloat16, kv_quant: bool = False) -> dict:
+    """Abstract/concrete KV cache for one attention layer.
+
+    Local-attention layers keep only a ring buffer of ``window`` keys —
+    this is what makes the long_500k cell feasible for recurrentgemma.
+    ``kv_quant`` stores K/V as int8 with per-(position, head) f32 scales
+    (2.1x smaller; the §Perf memory-term optimization for decode).
+    """
+    s = min(seq_len, layer_window) if layer_window else seq_len
+    shp = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quant:
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:3], jnp.float32),
+                "v_scale": jnp.zeros(shp[:3], jnp.float32)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def _quantize_kv(x):
+    """(B, 1, H, D) -> int8 values + (B, 1, H) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(cfg, p, x, cache, pos, *, layer_window: int = 0,
+                     cross_kv=None, q_chunk: int = 0):
+    """Single-token decode. x: (B, 1, d). cache: {"k","v"} (B, S, Hkv, D).
+
+    Returns (out, new_cache). With the cache's sequence dim sharded over
+    the ``model`` mesh axis, GSPMD turns the softmax reductions into the
+    flash-decoding partial-max/sum merge across shards.
+    """
+    b = x.shape[0]
+    if cross_kv is not None:
+        k, v = cross_kv["k"], cross_kv["v"]
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(q.dtype)
+        new_cache = cache
+        kv_len = k.shape[1]
+        valid = jnp.ones((kv_len,), bool)
+    else:
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q, k_new, v_new = _project_qkv(cfg, p, x, x)
+        q = _rope(cfg, q, posv if cfg.rope_variant != "mrope" else
+                  jnp.broadcast_to(posv, (3, b, 1)))
+        k_new = _rope(cfg, k_new, posv if cfg.rope_variant != "mrope" else
+                      jnp.broadcast_to(posv, (3, b, 1)))
+        s_cache = cache["k"].shape[1]
+        slot = pos % s_cache if layer_window else pos
+        quant = cache["k"].dtype == jnp.int8
+        if quant:
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], kq, (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], vq, (0, slot, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, slot, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, slot, 0)),
+            }
+            k = (new_cache["k"].astype(jnp.float32) *
+                 new_cache["k_scale"][..., None]).astype(x.dtype)
+            v = (new_cache["v"].astype(jnp.float32) *
+                 new_cache["v_scale"][..., None]).astype(x.dtype)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype),
+                (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype),
+                (0, slot, 0, 0))
+            new_cache = {"k": k, "v": v}
+        idx = jnp.arange(s_cache)
+        if layer_window:
+            valid = (idx <= slot) | (pos >= s_cache)   # ring buffer
+        else:
+            valid = idx <= pos
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    q = q.reshape(b, 1, hkv, g, cfg.head_dim)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k.astype(q.dtype)) * scale
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr, v.astype(x.dtype))
+    o = o.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return out, new_cache

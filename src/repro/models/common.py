@@ -1,0 +1,173 @@
+"""Shared model machinery: parameter schema, norms, rotary embeddings.
+
+Parameters are described by a *schema tree* of :class:`ParamDef` leaves —
+a single source of truth from which we derive (a) materialized arrays for
+real runs, (b) ``ShapeDtypeStruct`` stand-ins for the dry-run, and (c)
+logical-axis PartitionSpecs for the sharding rules. Keeping these three
+views in one place is what lets every (arch × shape × mesh) cell lower
+without allocation.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """One parameter: shape + logical axes + init recipe."""
+    shape: tuple
+    axes: tuple                  # logical axis name (or None) per dim
+    init: str = "fan_in"         # fan_in | zeros | ones | normal | embed
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_paths(tree, prefix=()):
+    """Yield (path, leaf) for a nested dict tree of ParamDefs."""
+    if is_def(tree):
+        yield prefix, tree
+        return
+    for k in sorted(tree):
+        yield from tree_paths(tree[k], prefix + (k,))
+
+
+def _leaf_key(root_key, path):
+    h = int.from_bytes(
+        hashlib.md5("/".join(map(str, path)).encode()).digest()[:4], "big")
+    return jax.random.fold_in(root_key, h)
+
+
+def _materialize(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    if d.init == "embed":
+        std = 1.0
+    elif d.init == "normal":
+        std = 0.02
+    else:  # fan_in (lecun normal)
+        std = float(np.sqrt(1.0 / fan_in))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_params(schema, key):
+    """Materialize a schema tree into concrete parameter arrays."""
+    def walk(node, path):
+        if is_def(node):
+            return _materialize(node, _leaf_key(key, path))
+        return {k: walk(v, path + (k,)) for k, v in node.items()}
+    return walk(schema, ())
+
+
+def abstract_params(schema):
+    """ShapeDtypeStruct tree (no allocation) — the dry-run's param view."""
+    def walk(node):
+        if is_def(node):
+            return jax.ShapeDtypeStruct(node.shape, node.dtype)
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema)
+
+
+def schema_axes(schema):
+    """Tree of logical-axis tuples mirroring the schema."""
+    def walk(node):
+        if is_def(node):
+            return node.axes
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema)
+
+
+def count_schema_params(schema) -> int:
+    return sum(int(np.prod(d.shape)) for _, d in tree_paths(schema))
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias=None, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_schema(cfg) -> dict:
+    d = {"scale": ParamDef((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p.get("bias"))
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate-half RoPE. x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,D/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float,
+                sections: tuple | None = None):
+    """Multimodal RoPE (Qwen2-VL): 3 position streams (t, h, w) drive
+    disjoint frequency sections of the half-dim. positions3: (3, B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    if sections is None:
+        s_h = half // 4
+        sections = (half - 2 * s_h, s_h, s_h)
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)    # (half,)
+    # select the position stream per frequency slot -> (half, B, S)
+    sec_id = jnp.asarray(
+        np.repeat(np.arange(3), np.asarray(sections)), jnp.int32)  # (half,)
+    p3 = positions3.astype(jnp.float32)                        # (3,B,S)
+    pos = p3[sec_id]                                           # (half,B,S)
+    ang = jnp.moveaxis(pos, 0, -1) * freqs                     # (B,S,half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Internal vocab padding (logical vocab unchanged; masked in loss)."""
+    return -(-v // multiple) * multiple

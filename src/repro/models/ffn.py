@@ -1,0 +1,41 @@
+"""Dense FFN variants: SwiGLU / GeGLU / GELU / squared-ReLU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+
+GATED = {"swiglu", "geglu"}
+
+
+def ffn_schema(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    s = {
+        "w_up": ParamDef((d, f), ("embed", "ffn")),
+        "w_down": ParamDef((f, d), ("ffn", "embed")),
+    }
+    if cfg.ffn_activation in GATED:
+        s["w_gate"] = ParamDef((d, f), ("embed", "ffn"))
+    return s
+
+
+def apply_ffn(cfg, p, x):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    act = cfg.ffn_activation
+    if act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.gelu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    elif act == "sq_relu":
+        r = jax.nn.relu(up)
+        h = r * r
+    else:
+        raise ValueError(f"unknown activation {act}")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(h.dtype))

@@ -1,0 +1,528 @@
+"""Unified model assembly for all 10 assigned architectures.
+
+Layers are grouped into *supergroups* of identical signature and executed
+with ``lax.scan`` over stacked parameters (fast compiles at 64 layers);
+heterogeneous patterns (xLSTM 1:7, Griffin 2:1) scan over their repeating
+period. The decode path is fully unrolled instead — decode steps are small
+and unrolling keeps XLA's cost analysis exact (DESIGN.md §4).
+
+``num_layer_override`` exists solely for the dry-run's cost accounting:
+lowering the same program with 0 layers isolates the non-loop "outer" cost
+so the roofline can reconstruct ``outer + L × body``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models.common import (
+    ParamDef, abstract_params, apply_norm, count_schema_params, init_params,
+    norm_schema, pad_vocab, schema_axes)
+
+Sig = tuple  # (mixer_kind, ffn_kind)
+
+
+# ---------------------------------------------------------- layer grouping
+
+def layer_sigs(cfg: ArchConfig, num_layers: int | None = None) -> list[Sig]:
+    n = cfg.num_layers if num_layers is None else num_layers
+    kinds = cfg.pattern_for(n)
+    sigs = []
+    for i, kind in enumerate(kinds):
+        if cfg.d_ff == 0:
+            ffn_kind = "none"
+        elif cfg.is_moe:
+            ffn_kind = ("dense_first" if (cfg.first_layer_dense and i == 0)
+                        else "moe")
+        else:
+            ffn_kind = "dense"
+        sigs.append((kind, ffn_kind))
+    return sigs
+
+
+def layer_groups(cfg: ArchConfig,
+                 num_layers: int | None = None) -> list[tuple[list, int]]:
+    """[(sig_chunk, repeats)] — scan over ``repeats`` stacked copies."""
+    sigs = layer_sigs(cfg, num_layers)
+    groups, i = [], 0
+    if sigs and cfg.first_layer_dense:
+        groups.append(([sigs[0]], 1))
+        i = 1
+    k = len(cfg.block_pattern)
+    rem = len(sigs) - i
+    reps = rem // k
+    if reps > 0 and all(sigs[i + j * k: i + (j + 1) * k] == sigs[i:i + k]
+                        for j in range(reps)):
+        groups.append((sigs[i:i + k], reps))
+        i += reps * k
+    while i < len(sigs):                        # run-length the remainder
+        j = i
+        while j < len(sigs) and sigs[j] == sigs[i]:
+            j += 1
+        groups.append(([sigs[i]], j - i))
+        i = j
+    return groups
+
+
+# ---------------------------------------------------------- schemas
+
+def _mixer_schema(cfg, kind, cross=False):
+    if kind in ("attn", "local_attn"):
+        return attn_mod.attn_schema(cfg)
+    if kind == "mlstm":
+        return rec_mod.mlstm_schema(cfg)
+    if kind == "slstm":
+        return rec_mod.slstm_schema(cfg)
+    if kind == "rglru":
+        return rec_mod.rglru_schema(cfg)
+    raise ValueError(kind)
+
+
+def block_schema(cfg, sig: Sig, cross: bool = False) -> dict:
+    kind, ffn_kind = sig
+    s = {"norm1": norm_schema(cfg), "mixer": _mixer_schema(cfg, kind)}
+    if cross:
+        s["norm_cross"] = norm_schema(cfg)
+        s["cross_attn"] = attn_mod.attn_schema(cfg, cross=True)
+    if ffn_kind != "none":
+        s["norm2"] = norm_schema(cfg)
+        if ffn_kind == "moe":
+            s["moe"] = moe_mod.moe_schema(cfg)
+        elif ffn_kind == "dense_first":
+            s["ffn"] = ffn_mod.ffn_schema(cfg, d_ff=cfg.dense_d_ff)
+        else:
+            s["ffn"] = ffn_mod.ffn_schema(cfg)
+    return s
+
+
+def _stack_defs(schema, n: int):
+    def walk(node):
+        if isinstance(node, ParamDef):
+            return ParamDef((n,) + node.shape, ("layers",) + node.axes,
+                            node.init, node.dtype)
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema)
+
+
+def param_schema(cfg: ArchConfig, num_layers: int | None = None) -> dict:
+    vp = pad_vocab(cfg.vocab_size)
+    s = {
+        "embed": ParamDef((vp, cfg.d_model), ("vocab", "embed"), "embed"),
+        "out_norm": norm_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamDef((cfg.d_model, vp), ("embed", "vocab"))
+    for gi, (chunk, reps) in enumerate(layer_groups(cfg, num_layers)):
+        g = {f"b{bi}": block_schema(cfg, sig, cross=cfg.is_encdec)
+             for bi, sig in enumerate(chunk)}
+        s[f"g{gi}"] = _stack_defs(g, reps) if reps > 1 else g
+    if cfg.is_encdec:
+        enc_sigs = layer_sigs(cfg, cfg.encoder_layers)
+        enc = {"out_norm": norm_schema(cfg)}
+        chunk = [enc_sigs[0]]
+        enc_g = {"b0": block_schema(cfg, enc_sigs[0], cross=False)}
+        enc["g0"] = _stack_defs(enc_g, cfg.encoder_layers)
+        s["encoder"] = enc
+    return s
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    schema = param_schema(cfg)
+    total = 0
+    from repro.models.common import tree_paths
+    for path, d in tree_paths(schema):
+        size = int(np.prod(d.shape))
+        if active_only and "moe" in path and path[-1] in (
+                "w_up", "w_down", "w_gate"):
+            size = size * cfg.top_k // max(cfg.num_experts, 1)
+        if active_only and path[-1] in ("embed", "lm_head"):
+            continue
+        total += size
+    return total
+
+
+# ---------------------------------------------------------- block forward
+
+def apply_block(cfg, sig: Sig, p, x, ctx):
+    """One block, full-sequence mode. Returns (x, aux)."""
+    kind, ffn_kind = sig
+    metrics = {}
+    cache = {}
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        y = attn_mod.attention(
+            cfg, p["mixer"], h, positions=ctx["positions"],
+            layer_window=window, causal=ctx["causal"],
+            q_chunk=ctx["q_chunk"])
+        if ctx["want_cache"]:
+            # recompute k/v for the cache (cheap relative to attention)
+            _, k, v = attn_mod._project_qkv(cfg, p["mixer"], h, h)
+            k = attn_mod._rope(cfg, k, ctx["positions"])
+            cache = {"k": k, "v": v}
+    elif kind == "mlstm":
+        y, state = rec_mod.mlstm_block(cfg, p["mixer"], h,
+                                       chunk=ctx["rec_chunk"],
+                                       unroll=ctx.get("rec_unroll", False))
+        cache = {"state": state} if ctx["want_cache"] else {}
+    elif kind == "slstm":
+        y, state = rec_mod.slstm_block(cfg, p["mixer"], h)
+        cache = {"state": state} if ctx["want_cache"] else {}
+    elif kind == "rglru":
+        y, state = rec_mod.rglru_block(cfg, p["mixer"], h)
+        cache = {"state": state} if ctx["want_cache"] else {}
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "cross_attn" in p and ctx.get("enc_out") is not None:
+        hc = apply_norm(cfg, p["norm_cross"], x)
+        yc = attn_mod.attention(
+            cfg, p["cross_attn"], hc, positions=ctx["positions"],
+            causal=False, xkv=ctx["enc_out"], q_chunk=ctx["q_chunk"],
+            kv_positions=ctx.get("enc_positions"))
+        x = x + yc
+    if ffn_kind != "none":
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if ffn_kind == "moe":
+            if ctx.get("moe_fn") is not None:
+                y2, moe_metrics = ctx["moe_fn"](p["moe"], h2)
+            else:
+                y2, moe_metrics = moe_mod.apply_moe(
+                    cfg, p["moe"], h2, groups=ctx.get("moe_groups", 1),
+                    ep_sharder=ctx.get("ep_sharder"),
+                    group_sharder=ctx.get("moe_group_sharder"))
+            metrics.update(moe_metrics)
+        else:
+            y2 = ffn_mod.apply_ffn(cfg, p["ffn"], h2)
+        x = x + y2
+    return x, {"metrics": metrics, "cache": cache}
+
+
+def _zero_metrics(cfg):
+    z = {}
+    if cfg.is_moe:
+        z = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+             "moe_z_loss": jnp.zeros((), jnp.float32),
+             "expert_load": jnp.zeros((cfg.num_experts,), jnp.int32),
+             "dropped_tokens": jnp.zeros((), jnp.int32)}
+    return z
+
+
+def _merge_metrics(acc, new):
+    for k, v in new.items():
+        acc[k] = acc.get(k, 0) + v
+    return acc
+
+
+# ---------------------------------------------------------- full forward
+
+def embed_tokens(cfg, params, batch):
+    emb = params["embed"]
+    x = emb[batch["tokens"]].astype(jnp.bfloat16)
+    if cfg.modality == "vlm" and "vision_embeds" in batch:
+        x = jnp.where(batch["vision_mask"][..., None],
+                      batch["vision_embeds"].astype(x.dtype), x)
+    return x
+
+
+def _positions_for(cfg, batch, b, s):
+    if cfg.rope_variant == "mrope":
+        if "positions3" in batch:
+            return batch["positions3"]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def run_stack(cfg, params, x, ctx, groups, prefix: str):
+    """Apply all layer groups; scan over stacked repeats.
+
+    ``ctx["sharder"]`` re-constrains the residual stream at block
+    boundaries (sequence-parallel layout); ``ctx["remat"]`` wraps the scan
+    body in ``jax.checkpoint`` so the backward pass recomputes each layer
+    from its carried input instead of storing activations.
+    """
+    metrics = _zero_metrics(cfg)
+    caches = []
+    sharder = ctx.get("sharder") or (lambda t: t)
+    for gi, (chunk, reps) in enumerate(groups):
+        gp = params[f"{prefix}g{gi}"]
+
+        def body(xc, pl):
+            m = _zero_metrics(cfg)
+            entry = []
+            for bi, sig in enumerate(chunk):
+                xc, aux = apply_block(cfg, sig, pl[f"b{bi}"], xc, ctx)
+                xc = sharder(xc)
+                m = _merge_metrics(m, aux["metrics"])
+                entry.append(aux["cache"])
+            return xc, (m, entry)
+
+        if ctx.get("remat"):
+            body = jax.checkpoint(body, prevent_cse=False)
+        if reps == 1:
+            x, (m, entry) = body(x, gp)
+            metrics = _merge_metrics(metrics, m)
+            caches.append(entry)
+        elif not ctx.get("scan_layers", True):
+            # unrolled (exact XLA cost accounting; dry-run cost variants)
+            entries = []
+            for r in range(reps):
+                x, (m, entry) = body(x, jax.tree.map(lambda a: a[r], gp))
+                metrics = _merge_metrics(metrics, m)
+                entries.append(entry)
+            caches.append(entries)
+        else:
+            x, (ms, entries) = jax.lax.scan(body, x, gp)
+            metrics = _merge_metrics(
+                metrics, jax.tree.map(lambda a: a.sum(0), ms))
+            caches.append(entries)   # leaves stacked over reps
+    return x, metrics, caches
+
+
+def forward(cfg: ArchConfig, params, batch, *, q_chunk: int = 512,
+            rec_chunk: int = 256, want_cache: bool = False,
+            num_layers: int | None = None, sharder=None,
+            remat: bool = False, scan_layers: bool = True,
+            rec_unroll: bool = False, moe_groups: int = 1,
+            ep_sharder=None, moe_group_sharder=None, moe_fn=None):
+    """Full-sequence forward -> (final hidden states, metrics, caches)."""
+    x = embed_tokens(cfg, params, batch)
+    if sharder is not None:
+        x = sharder(x)
+    b, s, _ = x.shape
+    ctx = dict(positions=_positions_for(cfg, batch, b, s), causal=True,
+               q_chunk=q_chunk, rec_chunk=rec_chunk, want_cache=want_cache,
+               enc_out=None, sharder=sharder, remat=remat,
+               scan_layers=scan_layers, rec_unroll=rec_unroll,
+               moe_groups=moe_groups, ep_sharder=ep_sharder,
+               moe_group_sharder=moe_group_sharder, moe_fn=moe_fn)
+    if cfg.is_encdec:
+        src = batch["src_embeds"].astype(jnp.bfloat16)
+        bs, ss, _ = src.shape
+        enc_ctx = dict(positions=jnp.broadcast_to(
+            jnp.arange(ss, dtype=jnp.int32), (bs, ss)),
+            causal=False, q_chunk=q_chunk, rec_chunk=rec_chunk,
+            want_cache=False, enc_out=None, sharder=sharder, remat=remat,
+            scan_layers=scan_layers, rec_unroll=rec_unroll)
+        enc_groups = [([layer_sigs(cfg, 1)[0]], cfg.encoder_layers)]
+        enc_x, _, _ = run_stack(cfg, params["encoder"], src, enc_ctx,
+                                enc_groups, prefix="")
+        enc_x = apply_norm(cfg, params["encoder"]["out_norm"], enc_x)
+        ctx["enc_out"] = enc_x
+        ctx["enc_positions"] = enc_ctx["positions"]
+    groups = layer_groups(cfg, num_layers)
+    x, metrics, caches = run_stack(cfg, params, x, ctx, groups, prefix="")
+    x = apply_norm(cfg, params["out_norm"], x)
+    return x, metrics, caches
+
+
+def logits_from_hidden(cfg, params, x):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, q_chunk: int = 512,
+            rec_chunk: int = 256, num_layers: int | None = None,
+            sharder=None, logits_sharder=None, remat: bool = False,
+            scan_layers: bool = True, rec_unroll: bool = False,
+            moe_groups: int = 1, ep_sharder=None,
+            moe_group_sharder=None, moe_fn=None):
+    """Cross-entropy + MoE aux losses. labels < 0 are masked.
+
+    The logits tensor stays fully sharded (batch over ``data``, vocab over
+    ``model``); the label pick uses a one-hot masked reduction instead of
+    ``take_along_axis`` so GSPMD never all-gathers the vocab dim.
+    """
+    x, metrics, _ = forward(cfg, params, batch, q_chunk=q_chunk,
+                            rec_chunk=rec_chunk, num_layers=num_layers,
+                            sharder=sharder, remat=remat,
+                            scan_layers=scan_layers, rec_unroll=rec_unroll,
+                            moe_groups=moe_groups, ep_sharder=ep_sharder,
+                            moe_group_sharder=moe_group_sharder,
+                            moe_fn=moe_fn)
+    b, s, d = x.shape
+    labels = batch["labels"]
+    vp = pad_vocab(cfg.vocab_size)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if logits_sharder is not None:
+        logits = logits_sharder(logits)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vp), 2)
+    logits = jnp.where(vocab_ids >= cfg.vocab_size, attn_mod.NEG_INF,
+                       logits).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (b, s)
+    pick = (vocab_ids == jnp.maximum(labels, 0)[..., None])
+    ll = jnp.sum(jnp.where(pick, logits, 0.0), axis=-1)          # (b, s)
+    msk = (labels >= 0).astype(jnp.float32)
+    tot_nll = jnp.sum((lse - ll) * msk)
+    tot_cnt = jnp.sum(msk)
+    loss = tot_nll / jnp.maximum(tot_cnt, 1.0)
+    metrics = dict(metrics)
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * metrics["moe_aux_loss"] \
+            + 1e-3 * metrics["moe_z_loss"]
+    metrics["nll"] = tot_nll / jnp.maximum(tot_cnt, 1.0)
+    return loss, metrics
+
+
+def serve_prefill(cfg: ArchConfig, params, batch, *, q_chunk: int = 512,
+                  rec_chunk: int = 256, num_layers: int | None = None,
+                  sharder=None, scan_layers: bool = True,
+                  rec_unroll: bool = False, moe_groups: int = 1,
+                  ep_sharder=None, moe_group_sharder=None, moe_fn=None):
+    """Prefill: full forward returning last-position logits + layer caches."""
+    x, _, caches = forward(cfg, params, batch, q_chunk=q_chunk,
+                           rec_chunk=rec_chunk, want_cache=True,
+                           num_layers=num_layers, sharder=sharder,
+                           scan_layers=scan_layers, rec_unroll=rec_unroll,
+                           moe_groups=moe_groups, ep_sharder=ep_sharder,
+                           moe_group_sharder=moe_group_sharder,
+                           moe_fn=moe_fn)
+    logits = logits_from_hidden(cfg, params, x[:, -1:])
+    vp = pad_vocab(cfg.vocab_size)
+    neg = jnp.asarray(np.arange(vp) >= cfg.vocab_size)
+    logits = jnp.where(neg[None, None, :], attn_mod.NEG_INF, logits)
+    return logits, caches
+
+
+# ---------------------------------------------------------- decode path
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               src_len: int = 0, dtype=jnp.bfloat16,
+               kv_quant: bool = False) -> dict:
+    """Decode cache pytree (unrolled per layer)."""
+    sigs = layer_sigs(cfg)
+    layers = []
+    for kind, _ in sigs:
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else 0
+            entry = attn_mod.init_kv_cache(cfg, batch, seq_len, window,
+                                           dtype, kv_quant=kv_quant)
+            if cfg.is_encdec:
+                entry["cross_k"] = jnp.zeros(
+                    (batch, src_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+                entry["cross_v"] = jnp.zeros_like(entry["cross_k"])
+        elif kind == "mlstm":
+            c, n, m = rec_mod.mlstm_init_state(cfg, batch)
+            entry = {"c": c, "n": n, "m": m}
+        elif kind == "slstm":
+            c, n, h, m = rec_mod.slstm_init_state(cfg, batch)
+            entry = {"c": c, "n": n, "h": h, "m": m}
+        elif kind == "rglru":
+            buf, h = rec_mod.rglru_init_state(cfg, batch)
+            entry = {"conv": buf, "h": h}
+        layers.append(entry)
+    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+
+def _group_layer_params(cfg, params, num_layers: int | None = None):
+    """Flatten grouped/stacked params back to a per-layer list."""
+    out = []
+    for gi, (chunk, reps) in enumerate(layer_groups(cfg, num_layers)):
+        gp = params[f"g{gi}"]
+        for r in range(reps):
+            for bi, _ in enumerate(chunk):
+                bp = gp[f"b{bi}"]
+                out.append(jax.tree.map(lambda a: a[r], bp)
+                           if reps > 1 else bp)
+    return out
+
+
+def decode_step(cfg: ArchConfig, params, token, cache,
+                num_layers: int | None = None):
+    """One-token decode. token: (B, 1) int32. Returns (logits, cache)."""
+    pos = cache["pos"]
+    b = token.shape[0]
+    x = params["embed"][token].astype(jnp.bfloat16)
+    sigs = layer_sigs(cfg, num_layers)
+    layer_params = _group_layer_params(cfg, params, num_layers)
+    new_layers = []
+    for (kind, ffn_kind), p, entry in zip(sigs, layer_params,
+                                          cache["layers"]):
+        h = apply_norm(cfg, p["norm1"], x)
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else 0
+            y, new_entry = attn_mod.decode_attention(
+                cfg, p["mixer"], h, entry, pos, layer_window=window)
+            if cfg.is_encdec:
+                new_entry = dict(new_entry)
+                new_entry["cross_k"] = entry["cross_k"]
+                new_entry["cross_v"] = entry["cross_v"]
+        elif kind == "mlstm":
+            xi = jnp.einsum("bsd,de->bse", h,
+                            p["mixer"]["w_in"].astype(h.dtype))
+            gate = jnp.einsum("bsd,de->bse", h,
+                              p["mixer"]["w_gate"].astype(h.dtype))
+            yq, st = rec_mod.mlstm_decode_step(
+                p["mixer"], xi, (entry["c"], entry["n"], entry["m"]),
+                cfg.num_heads)
+            di = yq.shape[-1]
+            hd = di // cfg.num_heads
+            yh = yq.reshape(b, 1, cfg.num_heads, hd).astype(jnp.float32)
+            yh = yh * jax.lax.rsqrt(
+                jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-6)
+            yq = yh.reshape(b, 1, di) * p["mixer"]["ln_scale"].astype(
+                jnp.float32)
+            yq = yq.astype(h.dtype) * jax.nn.silu(gate)
+            y = jnp.einsum("bse,ed->bsd", yq,
+                           p["mixer"]["w_out"].astype(yq.dtype))
+            new_entry = {"c": st[0], "n": st[1], "m": st[2]}
+        elif kind == "slstm":
+            y, st = rec_mod.slstm_block(
+                cfg, p["mixer"], h,
+                state=(entry["c"], entry["n"], entry["h"], entry["m"]))
+            new_entry = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+        elif kind == "rglru":
+            y, st = rec_mod.rglru_block(
+                cfg, p["mixer"], h, state=(entry["conv"], entry["h"]),
+                decode=True)
+            new_entry = {"conv": st[0], "h": st[1]}
+        x = x + y
+        if "cross_attn" in p:
+            hc = apply_norm(cfg, p["norm_cross"], x)
+            yc, _ = attn_mod.decode_attention(
+                cfg, p["cross_attn"], hc, entry, pos,
+                cross_kv={"k": entry["cross_k"], "v": entry["cross_v"]})
+            x = x + yc
+        if ffn_kind != "none":
+            h2 = apply_norm(cfg, p["norm2"], x)
+            if ffn_kind == "moe":
+                y2, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
+            else:
+                y2 = ffn_mod.apply_ffn(cfg, p["ffn"], h2)
+            x = x + y2
+        new_layers.append(new_entry)
+    x = apply_norm(cfg, params["out_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)
+    vp = pad_vocab(cfg.vocab_size)
+    neg = jnp.asarray(np.arange(vp) >= cfg.vocab_size)
+    logits = jnp.where(neg[None, None, :], attn_mod.NEG_INF, logits)
+    return logits, {"pos": pos + 1, "layers": new_layers}
+
+
+# ---------------------------------------------------------- entry points
+
+def make_params(cfg: ArchConfig, seed: int = 0,
+                num_layers: int | None = None):
+    return init_params(param_schema(cfg, num_layers),
+                       jax.random.PRNGKey(seed))
+
+
+def make_abstract_params(cfg: ArchConfig, num_layers: int | None = None):
+    return abstract_params(param_schema(cfg, num_layers))
+
+
+def params_axes(cfg: ArchConfig, num_layers: int | None = None):
+    return schema_axes(param_schema(cfg, num_layers))

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts: top-k router + capacity-based scatter dispatch.
+
+The dispatch path deliberately reuses the paper's parallelization patterns
+(DESIGN.md §5):
+
+* the (token × expert-slot) assignment is flattened into a dense work-item
+  array — the census planner's "manhattan collapse" applied to routing;
+* per-device router/load statistics are privatized partial sums combined
+  with one ``psum`` (the paper's 64 local census vectors);
+* tokens land in a static (E, C, d) buffer via scatter-add (no atomics, no
+  ragged loops), experts run as one batched einsum sharded over the
+  ``experts`` logical axis (EP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamDef
+from repro.models.ffn import GATED
+
+
+def moe_schema(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = {
+        "router": ParamDef((d, e), ("embed", "experts"), "normal"),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "ffn")),
+        "w_down": ParamDef((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.ffn_activation in GATED:
+        s["w_gate"] = ParamDef((e, d, f), ("experts", "embed", "ffn"))
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        s["shared_up"] = ParamDef((d, fs), ("embed", "ffn"))
+        s["shared_down"] = ParamDef((fs, d), ("ffn", "embed"))
+        if cfg.ffn_activation in GATED:
+            s["shared_gate"] = ParamDef((d, fs), ("embed", "ffn"))
+    return s
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: (E, C, d) -> (E, C, d), batched over experts."""
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(xe.dtype))
+    if cfg.ffn_activation in GATED:
+        gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(xe.dtype))
+        h = (jax.nn.silu(gate) if cfg.ffn_activation == "swiglu"
+             else jax.nn.gelu(gate)) * up
+    elif cfg.ffn_activation == "sq_relu":
+        r = jax.nn.relu(up)
+        h = r * r
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(h.dtype))
+
+
+def apply_moe(cfg, p, x, capacity_factor: float = 1.25, groups: int = 1,
+              ep_sharder=None, group_sharder=None):
+    """x: (B, S, d) -> (out, aux_metrics).
+
+    Capacity-based dispatch with **per-group capacity**: tokens are split
+    into ``groups`` contiguous groups (aligned with the batch/data
+    sharding, like GShard's per-device groups), each with capacity
+    C = ceil(T_g·k/E · cf). This keeps every dispatch tensor — the one-hot
+    position cumsum, the (G, E·C+1, d) scatter buffer — leading-dim
+    sharded; the (G,...) -> (E,...) transpose before the expert einsum is
+    the canonical MoE all-to-all. ``ep_sharder`` re-constrains the expert
+    batch (EP over the ``model`` axis when E divides it).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    g = groups if t % max(groups, 1) == 0 else 1
+    tl = t // g
+    gsh = group_sharder or (lambda a: a)
+    xg = gsh(x.reshape(g, tl, d))                              # (G, Tl, d)
+    xt = xg.reshape(t, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype))
+    logits32 = gsh(logits.astype(jnp.float32))
+    probs = jax.nn.softmax(logits32, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (G, Tl, k)
+
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(np.ceil(tl * k / e * capacity_factor)), 4)
+
+    # flat work items per group: the manhattan collapse of routing
+    i_items = tl * k
+    ge = gsh(expert_idx.reshape(g, i_items))                   # (G, I)
+    gg = gsh(gate_vals.reshape(g, i_items))
+    local_t = jax.lax.broadcasted_iota(jnp.int32, (g, i_items), 1) // k
+
+    onehot = gsh(jax.nn.one_hot(ge, e, dtype=jnp.int32))       # (G, I, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot             # exclusive
+    pos = jnp.take_along_axis(
+        pos_in_e, ge[..., None], axis=2)[..., 0]               # (G, I)
+    keep = pos < cap
+    slot = jnp.where(keep, ge * cap + pos, e * cap)            # (G, I)
+
+    # scatter tokens into (G, E*C+1, d); last row per group = drop bin
+    items_in = jnp.take_along_axis(xg, local_t[..., None], axis=1)
+    g_idx = jax.lax.broadcasted_iota(jnp.int32, (g, i_items), 0)
+    buf = gsh(jnp.zeros((g, e * cap + 1, d), xt.dtype))
+    buf = gsh(buf.at[g_idx, slot].add(items_in))
+
+    # (G, E, C, d) -> (E, G*C, d): the MoE all-to-all
+    xe = buf[:, :-1].reshape(g, e, cap, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(e, g * cap, d)
+    if ep_sharder is not None:
+        xe = ep_sharder(xe)
+    ye = _expert_ffn(cfg, p, xe)
+    if ep_sharder is not None:
+        ye = ep_sharder(ye)
+    ye = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)        # (G,E,C,d)
+    ye = gsh(ye.reshape(g, e * cap, d))
+    ye = jnp.concatenate([ye, jnp.zeros((g, 1, d), ye.dtype)], axis=1)
+
+    # combine: gather back per group, weighted by gates
+    out_items = jnp.take_along_axis(ye, slot[..., None], axis=1)
+    out_items = out_items * gg[..., None].astype(ye.dtype)
+    out = gsh(jnp.zeros((g, tl, d), ye.dtype))
+    out = gsh(out.at[g_idx, local_t].add(out_items))
+    out = out.reshape(t, d)
+
+    if cfg.num_shared_experts:
+        sp = {"w_up": p["shared_up"], "w_down": p["shared_down"]}
+        if "shared_gate" in p:
+            sp["w_gate"] = p["shared_gate"]
+        from repro.models.ffn import apply_ffn
+        out = out + apply_ffn(cfg, sp, xt[None]).reshape(t, d)
+
+    # auxiliary losses + privatized load stats (paper pattern: per-shard
+    # partials, one reduction)
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    load = onehot.sum(axis=(0, 1))                             # (E,) int32
+    ce = load.astype(jnp.float32) / max(t * k, 1)
+    aux_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits32, axis=-1) ** 2)
+    dropped = jnp.sum(1 - keep.astype(jnp.int32))
+    metrics = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss,
+               "expert_load": load, "dropped_tokens": dropped}
+    return out.reshape(b, s, d), metrics

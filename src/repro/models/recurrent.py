@@ -1,0 +1,362 @@
+"""Recurrent sequence mixers: mLSTM, sLSTM (xLSTM) and RG-LRU (Griffin /
+RecurrentGemma).
+
+* mLSTM — matrix-memory LSTM with exponential gating. Trained with the
+  chunkwise-parallel form (quadratic within a chunk, (C, n, m) state scan
+  across chunks); decoded with the O(1) recurrent step. The two forms are
+  asserted equivalent in the property tests.
+* sLSTM — scalar-memory LSTM with recurrent weights; strictly sequential
+  (``lax.scan`` over time), per the xLSTM paper.
+* RG-LRU — elementwise gated linear recurrence, computed with
+  ``jax.lax.associative_scan`` (log-depth, fully parallel — and, unlike a
+  scan, fully visible to XLA's cost analysis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamDef
+
+F32 = jnp.float32
+
+
+# ================================================================= mLSTM
+
+#: xLSTM qkv_proj_blocksize: q/k/v are block-diagonal with 4x4 blocks
+#: (near-diagonal), which is what puts the 48L/2048d config at ~1.3B.
+QKV_BLOCK = 4
+
+
+def mlstm_schema(cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    di = 2 * d                      # xLSTM mLSTM projection factor 2
+    nb = di // QKV_BLOCK
+    return {
+        "w_in": ParamDef((d, di), ("embed", "ffn")),
+        "w_gate": ParamDef((d, di), ("embed", "ffn")),
+        "wq": ParamDef((nb, QKV_BLOCK, QKV_BLOCK), ("ffn", None, None)),
+        "wk": ParamDef((nb, QKV_BLOCK, QKV_BLOCK), ("ffn", None, None)),
+        "wv": ParamDef((nb, QKV_BLOCK, QKV_BLOCK), ("ffn", None, None)),
+        "w_if": ParamDef((di, 2 * h), ("ffn", None)),   # i, f gate heads
+        "b_if": ParamDef((2 * h,), (None,), "zeros"),
+        "ln_scale": ParamDef((di,), ("ffn",), "ones"),
+        "w_out": ParamDef((di, d), ("ffn", "embed")),
+    }
+
+
+def _headwise_proj(x, w):
+    """Block-diagonal projection: x (..., di), w (nb, bs, bs)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    y = jnp.einsum("...nk,nkj->...nj", xs, w.astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+def _mlstm_gates(p, xi, h):
+    gf = jnp.einsum("btd,dg->btg", xi, p["w_if"].astype(xi.dtype))
+    gf = gf.astype(F32) + p["b_if"].astype(F32)
+    log_i = gf[..., :h]                          # i = exp(raw)
+    log_f = -jax.nn.softplus(-gf[..., h:])       # f = sigmoid(raw)
+    return log_i, log_f
+
+
+def mlstm_chunkwise(p, x, h: int, chunk: int = 256, state=None,
+                    unroll: bool = False):
+    """x: (B, S, d_in). Returns (y, final_state).
+
+    state = (C (B,H,K,K), n (B,H,K), m (B,H)) with K = d_in // H.
+    """
+    b, s, di = x.shape
+    k_dim = di // h
+    xs = x
+    log_i, log_f = _mlstm_gates(p, xs, h)                     # (B,S,H)
+
+    q = _headwise_proj(xs, p["wq"])
+    k = _headwise_proj(xs, p["wk"])
+    v = _headwise_proj(xs, p["wv"])
+    split = lambda z: z.reshape(b, s, h, k_dim)
+    q, k, v = split(q), split(k), split(v)
+    q = q * (1.0 / np.sqrt(k_dim))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, k_dim, k_dim), F32)
+        n0 = jnp.zeros((b, h, k_dim), F32)
+        m0 = jnp.full((b, h), -1e30, F32)
+        state = (c0, n0, m0)
+
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        zpad = lambda z: jnp.pad(z, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (z.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    w = chunk
+    resh = lambda z: z.reshape(b, nchunks, w, *z.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(log_i), resh(log_f)
+
+    def step(state, inputs):
+        c0, n0, m0 = state
+        q, k, v, li, lf = inputs                  # (B,W,H,K)/(B,W,H)
+        cf = jnp.cumsum(lf, axis=1)               # F_t  (B,W,H)
+        # intra-chunk decay matrix: D[t, s] = F_t - F_s + log_i_s, s <= t
+        dmat = cf[:, :, None, :] - cf[:, None, :, :] + li[:, None, :, :]
+        tidx = np.arange(w)
+        causal = jnp.asarray(tidx[:, None] >= tidx[None, :])
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        a_inter = cf + m0[:, None, :]             # (B,W,H) decay of carry
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), a_inter)
+        m_t = jnp.maximum(m_t, -1e30)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])             # (B,W,W,H)
+        inter_w = jnp.exp(a_inter - m_t)                      # (B,W,H)
+
+        scores = jnp.einsum("bthk,bshk->btsh", q.astype(F32),
+                            k.astype(F32)) * dexp
+        num_intra = jnp.einsum("btsh,bshV->bthV", scores, v.astype(F32))
+        num_inter = jnp.einsum("bthk,bhkV->bthV", q.astype(F32), c0)
+        num = num_intra + num_inter * inter_w[..., None]
+        den_intra = jnp.sum(scores, axis=2)                   # (B,W,H)
+        den_inter = jnp.einsum("bthk,bhk->bth", q.astype(F32), n0)
+        den = den_intra + den_inter * inter_w
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = num / denom[..., None]
+
+        # carry to next chunk
+        ftot = cf[:, -1]                                      # (B,H)
+        m_next = jnp.maximum(ftot + m0,
+                             jnp.max(ftot[:, None] - cf + li, axis=1))
+        wts = jnp.exp(ftot[:, None] - cf + li - m_next[:, None])  # (B,W,H)
+        c_next = (jnp.exp(ftot + m0 - m_next)[..., None, None] * c0 +
+                  jnp.einsum("bwh,bwhk,bwhV->bhkV", wts,
+                             k.astype(F32), v.astype(F32)))
+        n_next = (jnp.exp(ftot + m0 - m_next)[..., None] * n0 +
+                  jnp.einsum("bwh,bwhk->bhk", wts, k.astype(F32)))
+        return (c_next, n_next, m_next), y
+
+    state, ys = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc),
+                             unroll=nchunks if unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(b, nchunks * w, h, k_dim)[:, :s]
+    return y.reshape(b, s, di).astype(x.dtype), state
+
+
+def mlstm_decode_step(p, x, state, h: int):
+    """x: (B, 1, d_in); O(1) recurrent update (the sequential form)."""
+    b, _, di = x.shape
+    k_dim = di // h
+    log_i, log_f = _mlstm_gates(p, x, h)                      # (B,1,H)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]
+    q = _headwise_proj(x, p["wq"])[:, 0]
+    k = _headwise_proj(x, p["wk"])[:, 0]
+    v = _headwise_proj(x, p["wv"])[:, 0]
+    q = q.reshape(b, h, k_dim).astype(F32) * (1.0 / np.sqrt(k_dim))
+    k = k.reshape(b, h, k_dim).astype(F32)
+    v = v.reshape(b, h, k_dim).astype(F32)
+    c0, n0, m0 = state
+    m1 = jnp.maximum(log_f + m0, log_i)
+    fw = jnp.exp(log_f + m0 - m1)
+    iw = jnp.exp(log_i - m1)
+    c1 = fw[..., None, None] * c0 + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n1 = fw[..., None] * n0 + iw[..., None] * k
+    num = jnp.einsum("bhk,bhkV->bhV", q, c1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n1)),
+                      jnp.exp(-m1))
+    y = (num / den[..., None]).reshape(b, 1, di)
+    return y.astype(x.dtype), (c1, n1, m1)
+
+
+def mlstm_block(cfg, p, x, *, chunk: int = 256, state=None, decode=False,
+                unroll: bool = False):
+    """Full mLSTM block: up-proj, mixer, gate, down-proj."""
+    xi = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    gate = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype))
+    if decode:
+        y, state = mlstm_decode_step(p, xi, state, cfg.num_heads)
+    else:
+        y, state = mlstm_chunkwise(p, xi, cfg.num_heads, chunk, state,
+                                   unroll=unroll)
+    # per-head group norm (RMS over head dim)
+    b, s, di = y.shape
+    hd = di // cfg.num_heads
+    yh = y.reshape(b, s, cfg.num_heads, hd).astype(F32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-6)
+    y = yh.reshape(b, s, di) * p["ln_scale"].astype(F32)
+    y = y.astype(x.dtype) * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(y.dtype))
+    return out, state
+
+
+def mlstm_init_state(cfg, batch: int, dtype=F32):
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    k = di // h
+    return (jnp.zeros((batch, h, k, k), F32),
+            jnp.zeros((batch, h, k), F32),
+            jnp.full((batch, h), -1e30, F32))
+
+
+# ================================================================= sLSTM
+
+def slstm_schema(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    return {
+        "w_gates": ParamDef((d, 4 * d), ("embed", "ffn")),   # z, i, f, o
+        "r_gates": ParamDef((h, hd, 4 * hd), ("heads", None, None)),
+        "b_gates": ParamDef((4 * d,), ("ffn",), "zeros"),
+        "ln_scale": ParamDef((d,), ("embed",), "ones"),
+        "w_up": ParamDef((d, 4 * d // 3), ("embed", "ffn")),
+        "w_up_gate": ParamDef((d, 4 * d // 3), ("embed", "ffn")),
+        "w_down": ParamDef((4 * d // 3, d), ("ffn", "embed")),
+    }
+
+
+def slstm_scan(cfg, p, x, state=None):
+    """Strictly sequential sLSTM over time. x: (B, S, d)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(x.dtype))
+    wx = wx.astype(F32) + p["b_gates"].astype(F32)            # (B,S,4d)
+    wx = wx.reshape(b, s, h, 4 * hd)
+    if state is None:
+        state = slstm_init_state(cfg, b)
+
+    r = p["r_gates"].astype(F32)
+
+    def step(carry, wx_t):
+        c, n, hprev, m = carry                                # (B,H,hd)...
+        rec = jnp.einsum("bhk,hkg->bhg", hprev, r)            # (B,H,4hd)
+        g = wx_t.astype(F32) + rec
+        z = jnp.tanh(g[..., :hd])
+        log_i = g[..., hd:2 * hd]
+        log_f = -jax.nn.softplus(-g[..., 2 * hd:3 * hd])
+        o = jax.nn.sigmoid(g[..., 3 * hd:])
+        m1 = jnp.maximum(log_f + m, log_i)
+        fw, iw = jnp.exp(log_f + m - m1), jnp.exp(log_i - m1)
+        c1 = fw * c + iw * z
+        n1 = jnp.maximum(fw * n + iw, jnp.exp(-m1))
+        h1 = o * c1 / n1
+        return (c1, n1, h1, m1), h1
+
+    wx_t = wx.swapaxes(0, 1)                                  # (S,B,H,4hd)
+    state, ys = jax.lax.scan(step, state, wx_t)
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    return y, state
+
+
+def slstm_init_state(cfg, batch: int):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), F32)
+    return (z, z + 1e-6, z, jnp.full((batch, h, hd), -1e30, F32))
+
+
+def slstm_block(cfg, p, x, *, state=None, decode=False):
+    y, state = slstm_scan(cfg, p, x, state)
+    b, s, d = y.shape
+    h = cfg.num_heads
+    yh = y.reshape(b, s, h, d // h).astype(F32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-6)
+    y = (yh.reshape(b, s, d) * p["ln_scale"].astype(F32)).astype(x.dtype)
+    up = jnp.einsum("bsd,df->bsf", y, p["w_up"].astype(y.dtype))
+    gate = jnp.einsum("bsd,df->bsf", y, p["w_up_gate"].astype(y.dtype))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(gate) * up,
+                     p["w_down"].astype(up.dtype))
+    return out, state
+
+
+# ================================================================= RG-LRU
+
+def rglru_schema(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv1d_width
+    return {
+        "w_x": ParamDef((d, w), ("embed", "lru")),
+        "w_gate_branch": ParamDef((d, w), ("embed", "lru")),
+        "conv_w": ParamDef((cw, w), (None, "lru"), "normal"),
+        "conv_b": ParamDef((w,), ("lru",), "zeros"),
+        "w_rec_gate": ParamDef((w, w), ("lru", "lru")),
+        "w_in_gate": ParamDef((w, w), ("lru", "lru")),
+        "lam": ParamDef((w,), ("lru",), "normal"),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+_C_RGLRU = 8.0
+
+
+def _rglru_core(p, u, h0=None):
+    """u: (B, S, W) post-conv activations; gated linear recurrence."""
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", u, p["w_rec_gate"].astype(u.dtype)).astype(F32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", u, p["w_in_gate"].astype(u.dtype)).astype(F32))
+    log_a0 = -jax.nn.softplus(-p["lam"].astype(F32))          # log sigmoid
+    log_a = _C_RGLRU * r * log_a0[None, None, :]              # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b_t = gated * i * u.astype(F32)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b_t = b_t.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    return h.astype(u.dtype), h[:, -1].astype(F32)
+
+
+def rglru_block(cfg, p, x, *, state=None, decode=False):
+    """Griffin recurrent block: proj -> causal conv -> RG-LRU -> gate."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, p["w_gate_branch"].astype(x.dtype)))
+    cw = cfg.conv1d_width
+    if decode:
+        conv_buf, h0 = state                       # (B, cw-1, W), (B, W)
+        seq = jnp.concatenate([conv_buf, u.astype(conv_buf.dtype)], axis=1)
+        conv_in = seq[:, -cw:]                     # (B, cw, W)
+        u_c = jnp.einsum("bcw,cw->bw", conv_in,
+                         p["conv_w"].astype(conv_in.dtype))
+        u_c = (u_c + p["conv_b"].astype(u_c.dtype))[:, None]
+        r = jax.nn.sigmoid(jnp.einsum(
+            "bsw,wv->bsv", u_c, p["w_rec_gate"].astype(u_c.dtype)
+        ).astype(F32))[:, 0]
+        i = jax.nn.sigmoid(jnp.einsum(
+            "bsw,wv->bsv", u_c, p["w_in_gate"].astype(u_c.dtype)
+        ).astype(F32))[:, 0]
+        log_a0 = -jax.nn.softplus(-p["lam"].astype(F32))
+        log_a = _C_RGLRU * r * log_a0[None, :]
+        a = jnp.exp(log_a)
+        gmul = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h1 = a * h0 + gmul * i * u_c[:, 0].astype(F32)
+        y = h1[:, None].astype(x.dtype)
+        new_state = (seq[:, -(cw - 1):], h1)
+    else:
+        # causal depthwise conv via static shifts (width is tiny)
+        acc = jnp.zeros_like(u, dtype=F32)
+        for j in range(cw):
+            shifted = jnp.pad(u, ((0, 0), (cw - 1 - j, 0), (0, 0))
+                              )[:, :u.shape[1]]
+            acc = acc + shifted.astype(F32) * p["conv_w"][j].astype(F32)
+        u_c = (acc + p["conv_b"].astype(F32)).astype(x.dtype)
+        h0 = state[1] if state is not None else None
+        y, h_last = _rglru_core(p, u_c, h0)
+        buf_src = jnp.concatenate(
+            [jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype), u], 1)
+        new_state = (buf_src[:, -(cw - 1):].astype(F32), h_last)
+    out = jnp.einsum("bsw,wd->bsd", y * gate.astype(y.dtype),
+                     p["w_out"].astype(y.dtype))
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch: int):
+    return (jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width), F32),
+            jnp.zeros((batch, cfg.lru_width), F32))

@@ -1,0 +1,87 @@
+"""Abstract input construction for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for a cell's step function inputs, plus
+the matching NamedSharding tree — the contract the dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import init_cache
+from repro.parallel.sharding import batch_axes, cache_shardings
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _seq_split_encdec(cfg: ArchConfig, seq_len: int) -> tuple[int, int]:
+    """Enc/dec budget split for encoder-decoder cells (documented in
+    DESIGN.md: the cell's seq_len covers src frames + tgt tokens 50/50)."""
+    return seq_len // 2, seq_len // 2
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    b_ax = batch_axes(mesh, b)
+    batch, shard = {}, {}
+    if cfg.is_encdec:
+        ss, st = _seq_split_encdec(cfg, s)
+        batch["src_embeds"] = SDS((b, ss, cfg.d_model), jnp.bfloat16)
+        shard["src_embeds"] = NamedSharding(mesh, P(b_ax, None, None))
+        s = st
+    batch["tokens"] = SDS((b, s), jnp.int32)
+    batch["labels"] = SDS((b, s), jnp.int32)
+    shard["tokens"] = NamedSharding(mesh, P(b_ax, None))
+    shard["labels"] = NamedSharding(mesh, P(b_ax, None))
+    if cfg.modality == "vlm":
+        batch["vision_embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        batch["vision_mask"] = SDS((b, s), jnp.bool_)
+        batch["positions3"] = SDS((3, b, s), jnp.int32)
+        shard["vision_embeds"] = NamedSharding(mesh, P(b_ax, None, None))
+        shard["vision_mask"] = NamedSharding(mesh, P(b_ax, None))
+        shard["positions3"] = NamedSharding(mesh, P(None, b_ax, None))
+    return batch, shard
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                  kv_quant: bool = False):
+    """(token, cache) abstract inputs + shardings for one decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    b_ax = batch_axes(mesh, b)
+    src_len = _seq_split_encdec(cfg, s)[0] if cfg.is_encdec else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, batch=b, seq_len=s, src_len=src_len,
+                           kv_quant=kv_quant))
+    token = SDS((b, 1), jnp.int32)
+    shardings = {
+        "token": NamedSharding(mesh, P(b_ax, None)),
+        "cache": cache_shardings(cache, mesh, b),
+    }
+    return token, cache, shardings
+
+
+def make_concrete_batch(cfg: ArchConfig, b: int, s: int, rng=None):
+    """Small concrete batch for examples/tests (mirrors train_batch_specs)."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    batch = {}
+    if cfg.is_encdec:
+        ss, st = _seq_split_encdec(cfg, s)
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(b, ss, cfg.d_model)), jnp.bfloat16)
+        s = st
+    batch["tokens"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.modality == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+        batch["vision_mask"] = jnp.asarray(rng.random((b, s)) < 0.25)
+        batch["positions3"] = jnp.asarray(np.broadcast_to(
+            np.arange(s, dtype=np.int32), (3, b, s)))
+    return batch

@@ -1,0 +1,210 @@
+"""Logical-axis sharding rules → PartitionSpecs.
+
+Every parameter carries logical axis names from its schema (``vocab``,
+``embed``, ``ffn``, ``heads``, ``experts``, ...). Rules map logical axes to
+mesh axes with two safeguards applied dim-by-dim:
+
+* divisibility — a dim that doesn't divide evenly by the mesh axis size
+  falls back to unsharded (e.g. 40 experts or 14 heads over a 16-way
+  ``model`` axis), keeping every (arch × mesh) cell compilable;
+* uniqueness — a mesh axis is used at most once per tensor.
+
+Default layout = FSDP(``data``) × TP(``model``): weights shard their
+feature dim over ``model`` and their ``embed``/reduction dim over ``data``
+(ZeRO-3-style), activations shard batch over ``data`` (+``pod``) and the
+sequence/residual stream over ``model`` (Megatron-style sequence
+parallelism, constrained at block boundaries only so GSPMD can pick the
+collective schedule inside a block).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical axis -> preferred mesh axes, in priority order.
+DEFAULT_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),            # usually too small; replicated
+    "lru": ("model",),
+    "embed": ("data",),        # FSDP / ZeRO-3 param sharding
+    "head_dim": (),
+    "layers": (),
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_axes(axes: tuple, shape: tuple, mesh: Mesh,
+                  rules: dict | None = None) -> P:
+    """Build a PartitionSpec for one tensor, honoring both safeguards."""
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    parts = []
+    for dim, name in enumerate(axes):
+        cand = rules.get(name, ()) if name else ()
+        if name == "batch":
+            # batch may combine (pod, data) when both divide
+            combo = [a for a in cand if a in sizes and a not in used]
+            total = int(np.prod([sizes[a] for a in combo])) if combo else 1
+            if combo and shape[dim] % total == 0:
+                parts.append(tuple(combo) if len(combo) > 1 else combo[0])
+                used.update(combo)
+                continue
+            combo = [a for a in combo if a == "data"]
+            if combo and shape[dim] % sizes[combo[0]] == 0:
+                parts.append(combo[0])
+                used.add(combo[0])
+                continue
+            parts.append(None)
+            continue
+        placed = False
+        for a in cand:
+            if a in sizes and a not in used and shape[dim] % sizes[a] == 0:
+                parts.append(a)
+                used.add(a)
+                placed = True
+                break
+        if not placed:
+            parts.append(None)
+    return P(*parts)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh,
+                   rules: dict | None = None):
+    """NamedSharding tree for (axes tree, ShapeDtypeStruct tree)."""
+    def walk(ax, sh):
+        if isinstance(ax, tuple):
+            return NamedSharding(
+                mesh, spec_for_axes(ax, sh.shape, mesh, rules))
+        return {k: walk(ax[k], sh[k]) for k in ax}
+    return walk(axes_tree, shape_tree)
+
+
+# ------------------------------------------------------- activation specs
+
+def batch_axes(mesh: Mesh, global_batch: int):
+    sizes = mesh_axis_sizes(mesh)
+    cand = [a for a in ("pod", "data") if a in sizes]
+    total = int(np.prod([sizes[a] for a in cand]))
+    if cand and global_batch % total == 0:
+        return tuple(cand) if len(cand) > 1 else cand[0]
+    if "data" in sizes and global_batch % sizes["data"] == 0:
+        return "data"
+    return None
+
+
+def activation_spec(mesh: Mesh, global_batch: int, seq_len: int,
+                    seq_shard: bool = True) -> P:
+    """Residual-stream constraint: (batch, seq, d_model)."""
+    b_ax = batch_axes(mesh, global_batch)
+    sizes = mesh_axis_sizes(mesh)
+    s_ax = ("model" if seq_shard and "model" in sizes
+            and seq_len % sizes["model"] == 0 else None)
+    return P(b_ax, s_ax, None)
+
+
+def make_activation_sharder(mesh: Mesh, global_batch: int, seq_len: int,
+                            seq_shard: bool = True):
+    spec = activation_spec(mesh, global_batch, seq_len, seq_shard)
+    sh = NamedSharding(mesh, spec)
+    def sharder(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, sh)
+        return x
+    return sharder
+
+
+def moe_dispatch_plan(cfg, mesh: Mesh, global_batch: int,
+                      seq_len: int = 0, seq_shard: bool = True):
+    """(groups, group_sharder, ep_sharder) for the grouped MoE dispatch.
+
+    groups = the full device count participating in the token layout
+    (batch shards × sequence shards), so each device owns whole dispatch
+    groups — per-group capacity is per-device capacity (GShard
+    semantics) and GSPMD never has to reshard the cumsum/scatter chain.
+    ``group_sharder`` pins every (G, ...) dispatch tensor to that layout;
+    ``ep_sharder`` constrains the (E, G·C, d) expert batch to EP over
+    ``model`` when E divides it (the canonical all-to-all), else shards
+    the capacity dim.
+    """
+    if not getattr(cfg, "is_moe", False):
+        return 1, None, None
+    sizes = mesh_axis_sizes(mesh)
+    b_ax = batch_axes(mesh, global_batch)
+    axes = [b_ax] if isinstance(b_ax, str) else list(b_ax or ())
+    tp = sizes.get("model", 1)
+    if (seq_shard and "model" in sizes and seq_len
+            and seq_len % sizes["model"] == 0):
+        axes.append("model")
+    groups = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    g_spec = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+    def group_sharder(a):
+        spec = P(*([g_spec] + [None] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, spec))
+
+    def ep_sharder(xe):
+        e = xe.shape[0]
+        if e % tp == 0:
+            spec = P("model", None, None)
+        elif xe.shape[1] % tp == 0:
+            spec = P(None, "model", None)
+        else:
+            spec = P(None, None, None)
+        return jax.lax.with_sharding_constraint(
+            xe, NamedSharding(mesh, spec))
+
+    return max(groups, 1), group_sharder, ep_sharder
+
+
+# ------------------------------------------------------- cache specs
+
+def cache_leaf_spec(path_names: tuple, shape: tuple, mesh: Mesh,
+                    global_batch: int) -> P:
+    """Sharding for decode-cache leaves, keyed by leaf name + rank."""
+    name = path_names[-1]
+    b_ax = batch_axes(mesh, global_batch)
+    sizes = mesh_axis_sizes(mesh)
+    def fit(ax, dim):
+        return ax if ax in sizes and shape[dim] % sizes[ax] == 0 else None
+    if name in ("k", "v", "cross_k", "cross_v"):     # (B, S, Hkv, hd)
+        return P(b_ax, fit("model", 1), None, None)
+    if name in ("k_scale", "v_scale"):               # (B, S, Hkv)
+        return P(b_ax, fit("model", 1), None)
+    if name == "c" and len(shape) == 4:              # mLSTM (B, H, K, K)
+        return P(b_ax, None, fit("model", 2), None)
+    if name in ("c", "n", "h", "m") and len(shape) == 3:
+        return P(b_ax, None, fit("model", 2))
+    if name == "n" and len(shape) == 3:
+        return P(b_ax, None, fit("model", 2))
+    if name == "m" and len(shape) == 2:
+        return P(b_ax, None)
+    if name == "conv":                               # (B, cw-1, W)
+        return P(b_ax, None, fit("model", 2))
+    if name == "h" and len(shape) == 2:              # (B, W)
+        return P(b_ax, fit("model", 1))
+    if len(shape) == 0:
+        return P()
+    return P(*([b_ax] + [None] * (len(shape) - 1)))
+
+
+def cache_shardings(cache_tree, mesh: Mesh, global_batch: int):
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+        return NamedSharding(
+            mesh, cache_leaf_spec(path, node.shape, mesh, global_batch))
+    return walk(cache_tree, ())

@@ -1,0 +1,154 @@
+"""Batched serving engine: prefill + decode with KV-cache management.
+
+Production shape: jitted prefill and decode steps (the same functions the
+dry-run lowers at pod scale), a cache conversion from prefill layout to
+the decode layout (including local-attention ring buffers), and greedy /
+temperature sampling. Runs end-to-end on CPU with reduced configs; at pod
+scale the same code paths shard per ``parallel.sharding``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.model import (
+    _group_layer_params, decode_step, init_cache, layer_sigs, serve_prefill)
+
+
+def _ring_place(k, capacity: int):
+    """Map prefill K/V (B, P, ...) into a ring buffer of ``capacity``."""
+    b, p = k.shape[0], k.shape[1]
+    if p <= capacity:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, capacity - p)
+        return jnp.pad(k, pad)
+    # slot j holds position P - capacity + ((j - P) mod capacity)
+    j = np.arange(capacity)
+    pos = p - capacity + ((j - p) % capacity)
+    return k[:, pos]
+
+
+def prefill_to_decode_cache(cfg: ArchConfig, caches, prefill_len: int,
+                            capacity: int, enc_out=None, params=None,
+                            enc_positions=None):
+    """Convert ``serve_prefill`` caches into the ``decode_step`` layout."""
+    sigs = layer_sigs(cfg)
+    # flatten group structure -> per-layer entries (structure from cfg)
+    from repro.models.model import layer_groups
+    flat = []
+    for (chunk, reps), group in zip(layer_groups(cfg), caches):
+        if reps == 1:
+            flat.extend(group)
+        else:  # scanned: leaves stacked over reps on axis 0
+            for r in range(reps):
+                for blk in group:
+                    flat.append(jax.tree.map(lambda a: a[r], blk))
+    layer_params = _group_layer_params(cfg, params) if params else None
+    layers = []
+    for i, ((kind, _), entry) in enumerate(zip(sigs, flat)):
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else 0
+            cap = min(capacity, window) if window else capacity
+            new = {"k": _ring_place(entry["k"].astype(jnp.bfloat16), cap),
+                   "v": _ring_place(entry["v"].astype(jnp.bfloat16), cap)}
+            if cfg.is_encdec:
+                p = layer_params[i]["cross_attn"]
+                ek = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                p["wk"].astype(enc_out.dtype))
+                ev = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                p["wv"].astype(enc_out.dtype))
+                if cfg.qkv_bias:
+                    ek = ek + p["bk"].astype(ek.dtype)
+                    ev = ev + p["bv"].astype(ev.dtype)
+                new["cross_k"] = ek.astype(jnp.bfloat16)
+                new["cross_v"] = ev.astype(jnp.bfloat16)
+            layers.append(new)
+        elif kind == "mlstm":
+            c, n, m = entry["state"]
+            layers.append({"c": c, "n": n, "m": m})
+        elif kind == "slstm":
+            c, n, h, m = entry["state"]
+            layers.append({"c": c, "n": n, "h": h, "m": m})
+        elif kind == "rglru":
+            buf, h = entry["state"]
+            layers.append({"conv": buf, "h": h})
+    return {"pos": jnp.asarray(prefill_len, jnp.int32), "layers": layers}
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_seq_len: int = 256,
+                 q_chunk: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq_len = max_seq_len
+        self.q_chunk = q_chunk
+        self._decode = jax.jit(
+            functools.partial(decode_step, cfg))
+        self._prefill = jax.jit(functools.partial(
+            serve_prefill, cfg, q_chunk=q_chunk))
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 src_embeds: np.ndarray | None = None) -> np.ndarray:
+        """tokens: (B, P) prompt ids -> (B, P + max_new_tokens)."""
+        cfg = self.cfg
+        b, p = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        enc_out = None
+        if cfg.is_encdec:
+            assert src_embeds is not None
+            batch["src_embeds"] = jnp.asarray(src_embeds, jnp.bfloat16)
+            from repro.models.model import run_stack, apply_norm  # noqa
+        if cfg.modality == "vlm":
+            batch["vision_mask"] = jnp.zeros((b, p), bool)
+            batch["vision_embeds"] = jnp.zeros((b, p, cfg.d_model),
+                                               jnp.bfloat16)
+            batch["positions3"] = jnp.asarray(np.broadcast_to(
+                np.arange(p, dtype=np.int32), (3, b, p)))
+        logits, caches = self._prefill(self.params, batch)
+        if cfg.is_encdec:
+            # recompute encoder output for cross K/V projection
+            from repro.models.model import forward
+            enc_out = self._encoder_out(batch)
+        cache = prefill_to_decode_cache(
+            cfg, caches, p, self.max_seq_len, enc_out=enc_out,
+            params=self.params)
+        out = [jnp.asarray(tokens, jnp.int32)]
+        rng = jax.random.PRNGKey(seed)
+        tok = self._sample(logits[:, -1], temperature, rng)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(self.params, tok, cache)
+            rng, sub = jax.random.split(rng)
+            tok = self._sample(logits[:, -1], temperature, sub)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def _encoder_out(self, batch):
+        from repro.models.common import apply_norm
+        from repro.models.model import layer_sigs, run_stack
+        cfg = self.cfg
+        src = batch["src_embeds"].astype(jnp.bfloat16)
+        bs, ss, _ = src.shape
+        ctx = dict(positions=jnp.broadcast_to(
+            jnp.arange(ss, dtype=jnp.int32), (bs, ss)), causal=False,
+            q_chunk=self.q_chunk, rec_chunk=256, want_cache=False,
+            enc_out=None, sharder=None, remat=False, scan_layers=True,
+            rec_unroll=False)
+        enc_groups = [([layer_sigs(cfg, 1)[0]], cfg.encoder_layers)]
+        x, _, _ = run_stack(cfg, self.params["encoder"], src, ctx,
+                            enc_groups, prefix="")
+        return apply_norm(cfg, self.params["encoder"]["out_norm"], x)
+
+    @staticmethod
+    def _sample(logits, temperature: float, rng) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            rng, logits.astype(jnp.float32) / temperature)[
+                :, None].astype(jnp.int32)

@@ -1,0 +1,100 @@
+"""Train-step construction: loss + grad + optimizer, sharding-aware.
+
+``build_train_step`` returns the pure step function plus the sharding
+trees for params / optimizer state / batch, ready for ``jax.jit`` —
+used identically by the real training loop and the dry-run lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import (
+    loss_fn, make_abstract_params, params_axes)
+from repro.parallel.sharding import (
+    batch_axes, make_activation_sharder, moe_dispatch_plan,
+    tree_shardings)
+from repro.train.optimizer import OptConfig, apply_update, init_state
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                     opt_cfg: OptConfig | None = None, *,
+                     q_chunk: int = 512, rec_chunk: int = 256,
+                     remat: bool = True,
+                     grad_accum: int = 1, seq_shard: bool = True,
+                     num_layers: int | None = None, rules=None,
+                     scan_layers: bool = True, rec_unroll: bool = False,
+                     moe_impl: str = "gspmd",
+                     moe_capacity_factor: float = 1.25):
+    """Returns (train_step, shardings dict, abstract state dict)."""
+    opt_cfg = opt_cfg or OptConfig()
+    sharder = make_activation_sharder(
+        mesh, shape.global_batch, shape.seq_len, seq_shard=seq_shard)
+    b_ax = batch_axes(mesh, shape.global_batch)
+    logits_sh = NamedSharding(mesh, P(b_ax, None, "model"))
+    logits_sharder = lambda t: jax.lax.with_sharding_constraint(t, logits_sh)
+    moe_groups, moe_gsh, ep_sharder = moe_dispatch_plan(
+        cfg, mesh, shape.global_batch, shape.seq_len, seq_shard)
+    moe_fn = None
+    if cfg.is_moe and moe_impl == "shard_map":
+        from repro.models.moe import moe_schema
+        from repro.models.moe_shard import make_sharded_moe
+        from repro.parallel.sharding import spec_for_axes
+        schema = moe_schema(cfg)
+        specs = {k: spec_for_axes(d.axes, d.shape, mesh)
+                 for k, d in schema.items()}
+        moe_fn = make_sharded_moe(cfg, mesh, b_ax, specs,
+                                  capacity_factor=moe_capacity_factor)
+
+    def compute_loss(params, batch):
+        return loss_fn(cfg, params, batch, q_chunk=q_chunk,
+                       rec_chunk=rec_chunk,
+                       num_layers=num_layers, sharder=sharder,
+                       logits_sharder=logits_sharder, remat=remat,
+                       scan_layers=scan_layers, rec_unroll=rec_unroll,
+                       moe_groups=moe_groups, ep_sharder=ep_sharder,
+                       moe_group_sharder=moe_gsh, moe_fn=moe_fn)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    compute_loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
+                                    *a.shape[1:]), batch)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                compute_loss, has_aux=True)(params, batch)
+        new_params, new_opt, opt_metrics = apply_update(
+            opt_cfg, params, grads, opt_state)
+        out_metrics = {"loss": loss, **opt_metrics}
+        for k in ("nll", "moe_aux_loss", "dropped_tokens"):
+            if k in metrics:
+                out_metrics[k] = metrics[k]
+        return new_params, new_opt, out_metrics
+
+    abs_params = make_abstract_params(cfg, num_layers)
+    axes = params_axes(cfg, num_layers)
+    p_shard = tree_shardings(axes, abs_params, mesh, rules)
+    abs_opt = jax.eval_shape(init_state, abs_params)
+    # moments share the param specs (f32); step is replicated
+    o_shard = {"mu": p_shard, "nu": p_shard,
+               "step": NamedSharding(mesh, P())}
+    shardings = {"params": p_shard, "opt": o_shard}
+    return train_step, shardings, {"params": abs_params, "opt": abs_opt}

@@ -1,0 +1,147 @@
+"""HLO collective parser (trip-count correction) and roofline math."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import (
+    collective_summary, parse_computations, shape_bytes)
+from repro.analysis.roofline import (
+    analyze_record, analytic_hbm_bytes, model_flops)
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
+        assert shape_bytes("f32[8]") == 32
+        assert shape_bytes("pred[4,4]") == 16
+
+    def test_multiple_and_unknown(self):
+        s = "tuple(f32[2,2], s32[3]) nonsense[9] u8[10]"
+        assert shape_bytes(s) == 16 + 12 + 10
+
+
+class TestCollectiveParser:
+    def _hlo_for(self, fn, args, mesh, in_specs):
+        sh = tuple(NamedSharding(mesh, s) for s in in_specs)
+        return jax.jit(fn, in_shardings=sh).lower(*args).compile().as_text()
+
+    def test_psum_detected(self):
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            return jax.shard_map(
+                lambda c: jax.lax.psum(c, "d"), mesh=mesh,
+                in_specs=P("d"), out_specs=P())(x)
+        x = jax.ShapeDtypeStruct((n * 4, 128), jnp.float32)
+        hlo = self._hlo_for(f, (x,), mesh, [P("d")])
+        s = collective_summary(hlo)
+        assert s["counts_by_kind"].get("all-reduce", 0) >= 1
+        assert s["total_bytes"] > 0
+
+    def test_scan_trip_multiplication(self):
+        """A psum inside a 7-iteration scan must count ~7x the bytes of
+        the same psum outside."""
+        n = len(jax.devices())
+        if n < 2:
+            pytest.skip("needs >= 2 devices")
+        mesh = jax.make_mesh((n,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+
+        def inner(x):
+            def body(c, _):
+                c = jax.lax.psum(c, "d") / n
+                return c, None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        def f(x):
+            return jax.shard_map(inner, mesh=mesh, in_specs=P(None, "d"),
+                                 out_specs=P(None, "d"),
+                                 check_vma=False)(x)
+
+        x = jax.ShapeDtypeStruct((8, n * 16), jnp.float32)
+        hlo = self._hlo_for(f, (x,), mesh, [P(None, "d")])
+        s = collective_summary(hlo)
+
+        def g(x):
+            return jax.shard_map(
+                lambda c: jax.lax.psum(c, "d"), mesh=mesh,
+                in_specs=P(None, "d"), out_specs=P(None))(x)
+        hlo1 = self._hlo_for(g, (x,), mesh, [P(None, "d")])
+        s1 = collective_summary(hlo1)
+        assert s1["total_bytes"] > 0
+        ratio = s["total_bytes"] / s1["total_bytes"]
+        assert 5.0 <= ratio <= 9.0, ratio
+
+    def test_parse_computations_structure(self):
+        hlo = """
+HloModule m
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ar = f32[4] all-reduce(f32[4] %x), replica_groups={}
+  ROOT %t = (s32[], f32[4]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main () -> f32[4] {
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+}
+"""
+        comps = parse_computations(hlo)
+        assert "body" in comps and "cond" in comps
+        s = collective_summary(hlo)
+        assert s["counts_by_kind"]["all-reduce"] == 12
+        assert s["bytes_by_kind"]["all-reduce"] == 12 * 2 * 16
+
+
+class TestRoofline:
+    def test_model_flops_train_vs_decode(self):
+        t = model_flops("qwen2-0.5b", "train_4k")
+        d = model_flops("qwen2-0.5b", "decode_32k")
+        assert t > d * 1000
+        assert t > 0 and d > 0
+
+    def test_analytic_bytes_positive_all_cells(self):
+        from repro.configs import all_configs, shapes_for
+        for arch, cfg in all_configs().items():
+            for shape in shapes_for(cfg):
+                b = analytic_hbm_bytes(arch, shape.name)
+                assert b > 0, (arch, shape.name)
+
+    def test_analyze_record(self):
+        rec = {
+            "status": "ok", "arch": "qwen2-0.5b", "shape": "train_4k",
+            "mesh": "16x16", "devices": 256,
+            "cost_corrected": {"flops": 4.2e15,
+                               "bytes_accessed": 3.7e14,
+                               "collective_bytes": 4e11},
+            "cost_scope": "global",
+            "memory": {"temp_bytes": 8.2e9, "argument_bytes": 5.5e7},
+        }
+        row = analyze_record(rec)
+        assert row.dominant in ("compute", "memory", "collective")
+        assert row.fits
+        assert 0 < row.roofline_frac <= 1.5
+        assert 0.2 < row.useful_ratio < 1.5
+
+    def test_decode_memory_dominated(self):
+        """decode_32k on a dense model must be memory-bound (KV reads)."""
+        rec = {
+            "status": "ok", "arch": "qwen2.5-32b", "shape": "decode_32k",
+            "mesh": "16x16", "devices": 256,
+            "cost_corrected": {"flops": 8.4e12 / 256,
+                               "collective_bytes": 1e7},
+            "cost_scope": "per_device",
+            "memory": {"temp_bytes": 1e9, "argument_bytes": 1e9},
+        }
+        row = analyze_record(rec)
+        assert row.dominant == "memory"

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step on CPU, asserting output shapes and finiteness (no NaNs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, get_config
+from repro.models.model import (
+    decode_step, init_cache, layer_groups, loss_fn, make_params,
+    count_params, forward)
+from repro.models.common import pad_vocab
+
+ARCHS = sorted(all_configs())
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng, b=B, s=S):
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.is_encdec:
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s // 2, cfg.d_model)), jnp.bfloat16)
+    if cfg.modality == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+        batch["vision_mask"] = jnp.asarray(
+            rng.random((b, s)) < 0.25)
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32), (3, b, s))
+        batch["positions3"] = jnp.asarray(pos)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(0)
+    params = make_params(cfg, seed=0)
+    batch = make_batch(cfg, rng)
+
+    x, metrics, _ = forward(cfg, params, batch, q_chunk=16, rec_chunk=8)
+    assert x.shape == (B, S, cfg.d_model)
+    assert bool(jnp.isfinite(x.astype(jnp.float32)).all())
+
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, q_chunk=16, rec_chunk=8),
+        has_aux=True)(params)
+    assert bool(jnp.isfinite(loss)), arch
+    gnorms = jax.tree.map(
+        lambda g: bool(jnp.isfinite(g.astype(jnp.float32)).all()), grads)
+    assert all(jax.tree.leaves(gnorms)), arch
+    # at least one nonzero gradient
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert total > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(1)
+    params = make_params(cfg, seed=1)
+    cache = init_cache(cfg, batch=B, seq_len=S,
+                       src_len=S // 2 if cfg.is_encdec else 0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    logits, cache = decode_step(cfg, params, tok, cache)
+    vp = pad_vocab(cfg.vocab_size)
+    assert logits.shape == (B, 1, vp)
+    real = logits[..., :cfg.vocab_size].astype(jnp.float32)
+    assert bool(jnp.isfinite(real).all()), arch
+    assert int(cache["pos"]) == 1
+    # padded vocab is masked out (when padding exists)
+    if vp > cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size:].max()) < -1e30
+
+    logits2, cache = decode_step(cfg, params, tok, cache)
+    assert int(cache["pos"]) == 2
+    assert bool(jnp.isfinite(
+        logits2[..., :cfg.vocab_size].astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_layer_grouping_covers_all_layers(arch):
+    cfg = get_config(arch)
+    groups = layer_groups(cfg)
+    total = sum(len(chunk) * reps for chunk, reps in groups)
+    assert total == cfg.num_layers, (arch, groups)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_sane(arch):
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    # the arch ids carry rough sizes; allow generous bounds (vocab padding,
+    # backbone-only for audio/vlm)
+    expected = {
+        "nemotron-4-15b": (12e9, 18e9),
+        "qwen2-0.5b": (0.3e9, 0.8e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "stablelm-12b": (10e9, 14e9),
+        "xlstm-1.3b": (0.9e9, 1.9e9),
+        "seamless-m4t-medium": (0.5e9, 1.8e9),
+        "qwen2-vl-2b": (1.2e9, 2.4e9),
+        "granite-moe-3b-a800m": (2.2e9, 4.2e9),
+        "deepseek-moe-16b": (13e9, 20e9),
+        "recurrentgemma-2b": (2.0e9, 3.6e9),
+    }[arch]
+    assert expected[0] < n < expected[1], (arch, n)

@@ -1,0 +1,200 @@
+"""Property-based tests (hypothesis) for system invariants.
+
+Census invariants: total = C(n,3); node-relabeling invariance; edge
+reversal swaps the D/U type pairs; distributed == serial.
+Model invariants: causality (future tokens cannot affect past logits);
+mLSTM chunkwise == sequential recurrence; RG-LRU associative scan ==
+step-by-step recurrence; GQA == MHA when kv == heads.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    TRIAD_NAMES, build_plan, census_bruteforce, from_edges, to_dense,
+    triad_census)
+
+# ------------------------------------------------------------- strategies
+
+
+@st.composite
+def digraphs(draw, max_n=16):
+    n = draw(st.integers(min_value=3, max_value=max_n))
+    density = draw(st.floats(min_value=0.0, max_value=0.6))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = rng.random((n, n)) < density
+    np.fill_diagonal(a, False)
+    return a
+
+
+REV_SWAP = {"021D": "021U", "021U": "021D", "111D": "111U",
+            "111U": "111D", "120D": "120U", "120U": "120D"}
+
+
+class TestCensusProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(digraphs())
+    def test_total_and_match_bruteforce(self, a):
+        n = a.shape[0]
+        src, dst = np.nonzero(a)
+        g = from_edges(src, dst, n=n)
+        c = triad_census(build_plan(g))
+        assert c.sum() == n * (n - 1) * (n - 2) // 6
+        assert (c == census_bruteforce(a)).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(digraphs(), st.integers(min_value=0, max_value=10**6))
+    def test_relabeling_invariance(self, a, seed):
+        n = a.shape[0]
+        perm = np.random.default_rng(seed).permutation(n)
+        ap = a[np.ix_(perm, perm)]
+        c1 = triad_census(build_plan(from_edges(*np.nonzero(a), n=n)))
+        c2 = triad_census(build_plan(from_edges(*np.nonzero(ap), n=n)))
+        assert (c1 == c2).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(digraphs())
+    def test_edge_reversal_swaps_du(self, a):
+        n = a.shape[0]
+        c_fwd = triad_census(build_plan(from_edges(*np.nonzero(a), n=n)))
+        c_rev = triad_census(build_plan(from_edges(*np.nonzero(a.T), n=n)))
+        for i, name in enumerate(TRIAD_NAMES):
+            j = TRIAD_NAMES.index(REV_SWAP.get(name, name))
+            assert c_fwd[i] == c_rev[j], (name,)
+
+    @settings(max_examples=10, deadline=None)
+    @given(digraphs(max_n=12))
+    def test_roundtrip_dense(self, a):
+        g = from_edges(*np.nonzero(a), n=a.shape[0])
+        assert (to_dense(g) == a).all()
+
+
+# ------------------------------------------------------------- models
+
+def _mk_cfg(name):
+    from repro.configs import get_config
+    return get_config(name).reduced()
+
+
+class TestModelProperties:
+    @pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b",
+                                      "xlstm-1.3b", "deepseek-moe-16b"])
+    def test_causality(self, arch):
+        """Changing tokens after position t must not change logits <= t."""
+        from repro.models.model import forward, make_params
+        cfg = _mk_cfg(arch)
+        rng = np.random.default_rng(0)
+        params = make_params(cfg, seed=0)
+        b, s, t = 1, 24, 11
+        toks = rng.integers(0, cfg.vocab_size, (b, s))
+        toks2 = toks.copy()
+        toks2[:, t + 1:] = rng.integers(0, cfg.vocab_size, (b, s - t - 1))
+        outs = []
+        for tk in (toks, toks2):
+            batch = {"tokens": jnp.asarray(tk, jnp.int32)}
+            x, _, _ = forward(cfg, params, batch, q_chunk=8, rec_chunk=4)
+            outs.append(np.asarray(x[:, :t + 1].astype(jnp.float32)))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_mlstm_chunkwise_equals_sequential(self):
+        from repro.models.common import init_params
+        from repro.models.recurrent import (
+            mlstm_chunkwise, mlstm_decode_step, mlstm_schema)
+        from repro.configs import get_config
+        cfg = get_config("xlstm-1.3b").reduced()
+        schema = mlstm_schema(cfg)
+        p = init_params(schema, jax.random.PRNGKey(0))
+        b, s, di = 2, 13, 2 * cfg.d_model
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(b, s, di)),
+                        jnp.float32) * 0.3
+        y_par, _ = mlstm_chunkwise(p, x, cfg.num_heads, chunk=4)
+        # sequential reference via the decode step
+        state = None
+        ys = []
+        from repro.models.recurrent import mlstm_init_state
+        state = mlstm_init_state(cfg, b)
+        for t in range(s):
+            yt, state = mlstm_decode_step(p, x[:, t:t + 1], state,
+                                          cfg.num_heads)
+            ys.append(yt)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                                   np.asarray(y_seq, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_rglru_scan_equals_sequential(self):
+        from repro.models.common import init_params
+        from repro.models.recurrent import (
+            rglru_block, rglru_init_state, rglru_schema)
+        from repro.configs import get_config
+        cfg = get_config("recurrentgemma-2b").reduced()
+        p = init_params(rglru_schema(cfg), jax.random.PRNGKey(2))
+        b, s = 2, 9
+        x = jnp.asarray(np.random.default_rng(3).normal(
+            size=(b, s, cfg.d_model)), jnp.float32) * 0.5
+        y_par, _ = rglru_block(cfg, p, x)
+        state = rglru_init_state(cfg, b)
+        ys = []
+        for t in range(s):
+            yt, state = rglru_block(cfg, p, x[:, t:t + 1], state=state,
+                                    decode=True)
+            ys.append(yt)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                                   np.asarray(y_seq, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_gqa_equals_mha_when_kv_equals_heads(self):
+        """GQA with kv == q heads is plain MHA: grouping must be a no-op."""
+        import dataclasses
+        from repro.models.attention import attention, attn_schema
+        from repro.models.common import init_params
+        from repro.configs import get_config
+        cfg = dataclasses.replace(_mk_cfg("qwen2-0.5b"), num_heads=4,
+                                  num_kv_heads=4)
+        p = init_params(attn_schema(cfg), jax.random.PRNGKey(4))
+        x = jnp.asarray(np.random.default_rng(5).normal(
+            size=(2, 16, cfg.d_model)), jnp.float32) * 0.3
+        pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+        y1 = attention(cfg, p, x, positions=pos, q_chunk=16)
+        y2 = attention(cfg, p, x, positions=pos, q_chunk=4)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_local_window_matches_masked_full(self):
+        """Banded chunked local attention == full attention with band mask."""
+        import dataclasses
+        from repro.models.attention import attention, attn_schema
+        from repro.models.common import init_params
+        from repro.configs import get_config
+        cfg = dataclasses.replace(_mk_cfg("recurrentgemma-2b"), window=6)
+        p = init_params(attn_schema(cfg), jax.random.PRNGKey(6))
+        s = 20
+        x = jnp.asarray(np.random.default_rng(7).normal(
+            size=(1, s, cfg.d_model)), jnp.float32) * 0.3
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (1, s))
+        y_local = attention(cfg, p, x, positions=pos, layer_window=6,
+                            q_chunk=4)
+        # reference: dense scores with band mask
+        from repro.models import attention as am
+        q, k, v = am._project_qkv(cfg, p, x, x)
+        q = am._rope(cfg, q, pos)
+        k = am._rope(cfg, k, pos)
+        hkv = cfg.num_kv_heads
+        g = cfg.num_heads // hkv
+        qg = q.reshape(1, s, hkv, g, cfg.head_dim)
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(cfg.head_dim)
+        i, j = np.arange(s)[:, None], np.arange(s)[None, :]
+        band = (j <= i) & (j > i - 6)
+        sc = jnp.where(jnp.asarray(band)[None, None, None], sc, am.NEG_INF)
+        pr = jax.nn.softmax(sc.astype(jnp.float32), -1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pr, v).reshape(
+            1, s, cfg.num_heads, cfg.head_dim)
+        y_ref = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+        np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
