@@ -124,19 +124,65 @@ def om_scaling(rows: list):
 
 def kernel_throughput(rows: list):
     import jax.numpy as jnp
-    from repro.kernels import tricode_histogram, tricode_histogram_ref
+    from repro.kernels import tricode_histogram_ref
     rng = np.random.default_rng(0)
     w = 1 << 20
+    from repro.kernels.tricode_hist import tricode_histogram_kernel
     tri = jnp.asarray(rng.integers(0, 64, w), jnp.int32)
     mask = jnp.ones(w, bool)
-    dt_ref, _ = _timeit(lambda: tricode_histogram_ref(
-        jnp.where(mask, tri, 64)).block_until_ready())
-    dt_k, _ = _timeit(lambda: tricode_histogram(
-        tri, mask, interpret=True).block_until_ready())
+    # hoist the jnp.where masking out of BOTH timed paths: each consumes
+    # the identical pre-masked array (w is already a BLOCK_ITEMS multiple),
+    # so neither side smuggles masking/padding cost into its timing
+    masked = jnp.where(mask, tri, 64).block_until_ready()
+    dt_ref, _ = _timeit(
+        lambda: tricode_histogram_ref(masked).block_until_ready())
+    dt_k, _ = _timeit(lambda: tricode_histogram_kernel(
+        masked, interpret=True).block_until_ready())
     rows.append(("kernel_tricode_hist_jnp", dt_ref * 1e6,
                  f"{w / dt_ref:.3g} items/s"))
     rows.append(("kernel_tricode_hist_pallas_interp", dt_k * 1e6,
                  "interpret-mode (CPU correctness harness)"))
+
+
+#: reduced sizes for the fused-kernel columns: interpret mode re-simulates
+#: every grid step on the CPU host, so the full WORKLOAD_SIZES are too slow
+FUSED_SIZES = {
+    "patents": (3_000, 3.0),
+    "orkut": (800, 20.0),
+    "webgraph": (1_500, 8.0),
+}
+
+
+def fused_vs_reference(rows: list):
+    """Fused single-pass kernel vs the jnp reference path, plus the
+    degree-oriented planning work reduction (see EXPERIMENTS.md)."""
+    for name in PAPER_WORKLOADS:
+        n, deg = FUSED_SIZES[name]
+        g = paper_workload(name, n=n, avg_degree=deg, seed=0)
+        plan = build_plan(g)
+        plan_deg = build_plan(g, orient="degree")
+        dt_ref, c_ref = _timeit(triad_census, plan, backend="jnp")
+        dt_fused, c_fused = _timeit(triad_census, plan,
+                                    backend="pallas-fused")
+        # explicit raise (not assert): this parity check is the regression
+        # gate benchmarks/check.sh relies on, and must survive python -O
+        if not (c_ref == c_fused).all():
+            raise AssertionError(f"fused census mismatch on {name}")
+        rows.append((f"fused_{name}_jnp", dt_ref * 1e6,
+                     f"items_per_s={plan.num_items / dt_ref:.3g}"))
+        rows.append((f"fused_{name}_pallas_fused_interp", dt_fused * 1e6,
+                     f"items_per_s={plan.num_items / dt_fused:.3g};"
+                     "interpret-mode (CPU correctness harness)"))
+        # degree-oriented planning: same census, fewer work items
+        dt_deg, c_deg = _timeit(triad_census, plan_deg,
+                                backend="pallas-fused")
+        if not (c_ref == c_deg).all():
+            raise AssertionError(
+                f"degree-oriented census mismatch on {name}")
+        rows.append((f"fused_{name}_degree_oriented", dt_deg * 1e6,
+                     f"items={plan_deg.num_items} vs {plan.num_items} "
+                     f"({plan_deg.num_items / plan.num_items:.2%} of "
+                     "default plan)"))
 
 
 def run(rows: list):
@@ -148,3 +194,11 @@ def run(rows: list):
     table_census(rows)
     om_scaling(rows)
     kernel_throughput(rows)
+    fused_vs_reference(rows)
+
+
+def run_smoke(rows: list):
+    """Fast subset for CI (benchmarks/check.sh): kernel throughput plus
+    the fused-vs-reference parity/latency columns on reduced workloads."""
+    kernel_throughput(rows)
+    fused_vs_reference(rows)

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI regression gate: tier-1 tests + a fast census benchmark smoke subset.
+#
+# The smoke subset (benchmarks/run.py --smoke) runs the tricode-histogram
+# kernel throughput comparison and the fused-vs-reference census columns on
+# reduced workloads; the fused path asserts bit-identical censuses against
+# the jnp backend, so a correctness regression in the fused kernel or the
+# degree-oriented planner fails this script without the full benchmark.
+#
+# Usage: bash benchmarks/check.sh   (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== census benchmark smoke subset =="
+python -m benchmarks.run --smoke

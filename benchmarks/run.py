@@ -14,14 +14,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="census benchmarks only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast census smoke subset (CI regression gate)")
     args = ap.parse_args()
 
     rows: list = []
     from benchmarks import census_bench
-    census_bench.run(rows)
-    if not args.quick:
-        from benchmarks import lm_bench
-        lm_bench.run(rows)
+    if args.smoke:
+        census_bench.run_smoke(rows)
+    else:
+        census_bench.run(rows)
+        if not args.quick:
+            from benchmarks import lm_bench
+            lm_bench.run(rows)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

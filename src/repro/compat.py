@@ -1,0 +1,84 @@
+"""JAX version compatibility shim.
+
+The codebase is written against the modern public API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``).  Older
+jax releases (<= 0.4.x, as baked into this container) ship ``shard_map``
+under ``jax.experimental`` and have neither ``AxisType`` nor the
+``axis_types`` kwarg.  Importing this module installs forward-compatible
+aliases onto ``jax`` itself so both the library and the test-suite idiom
+work unchanged on either version.
+
+Usage: ``from repro import compat`` (idempotent, side-effecting import) or
+use the re-exported :func:`shard_map` / :func:`make_mesh` directly.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+# --- shard_map -------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on old jax
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    @functools.wraps(_exp_shard_map)
+    def shard_map(f=None, /, *, mesh=None, in_specs=None, out_specs=None,
+                  **kw):
+        # modern jax.shard_map is keyword-only and curries when f is None
+        if f is None:
+            return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, **kw)
+        kw.pop("axis_names", None)  # not in the old signature
+        if "check_vma" in kw:       # renamed from check_rep in newer jax
+            kw["check_rep"] = kw.pop("check_vma")
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+# --- sharding.AxisType -----------------------------------------------------
+if not hasattr(jax.sharding, "AxisType"):  # pragma: no cover
+    class _AxisType:
+        """Stand-in for jax.sharding.AxisType (values are ignored by the
+        make_mesh shim below — old jax has no explicit/auto axis modes)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType
+
+# --- make_mesh(axis_types=...) --------------------------------------------
+_raw_make_mesh = getattr(jax, "make_mesh", None)
+_HAS_AXIS_TYPES = (_raw_make_mesh is not None and "axis_types"
+                   in inspect.signature(_raw_make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *args, **kwargs):
+    """``jax.make_mesh`` accepting (and dropping, if unsupported) the
+    ``axis_types`` keyword of newer jax; falls back to the raw ``Mesh``
+    constructor on releases that predate ``jax.make_mesh`` itself."""
+    if not _HAS_AXIS_TYPES:
+        kwargs.pop("axis_types", None)
+    if _raw_make_mesh is None:  # pragma: no cover - pre-0.4.35 jax only
+        import math
+        devices = kwargs.pop("devices", None)
+        if devices is None:
+            devices = jax.devices()[:math.prod(axis_shapes)]
+        import numpy as _np
+        return jax.sharding.Mesh(
+            _np.asarray(devices).reshape(axis_shapes), axis_names)
+    return _raw_make_mesh(axis_shapes, axis_names, *args, **kwargs)
+
+
+# only monkeypatch where the shim actually differs (old jax); on modern
+# jax the public jax.make_mesh is left untouched
+if not _HAS_AXIS_TYPES and not getattr(jax, "_repro_compat_mesh", False):
+    jax._repro_compat_mesh = True
+    jax.make_mesh = make_mesh
+
+__all__ = ["shard_map", "make_mesh"]

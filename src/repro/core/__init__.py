@@ -9,7 +9,8 @@ Public API::
 """
 
 from repro.core.digraph import CompactDigraph, from_edges, from_dense, to_dense
-from repro.core.planner import CensusPlan, build_plan
+from repro.core.planner import (
+    CensusPlan, build_plan, pack_items, unpack_items)
 from repro.core.census import triad_census, assemble_census
 from repro.core.distributed import (
     triad_census_distributed, triad_census_graph, default_mesh)
@@ -23,7 +24,8 @@ from repro.core.temporal import TriadMonitor, SECURITY_PATTERNS
 
 __all__ = [
     "CompactDigraph", "from_edges", "from_dense", "to_dense",
-    "CensusPlan", "build_plan", "triad_census", "assemble_census",
+    "CensusPlan", "build_plan", "pack_items", "unpack_items",
+    "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",
     "TRIAD_NAMES", "TRICODE_TO_CLASS", "FOLD_64_TO_16", "NUM_CLASSES",

@@ -8,6 +8,16 @@ the 2-bit codes, and accumulate a 64-bin tricode histogram with
 ``segment``-style reductions — no atomics, which is the structural version
 of the paper's privatized census vectors.
 
+Backends:
+
+* ``jnp``          — pure XLA; the oracle for everything below.
+* ``pallas``       — classification in XLA, the 64-bin histogram hot loop
+                     in the Pallas :mod:`repro.kernels.tricode_hist` kernel.
+* ``pallas-fused`` — the whole per-item pipeline (gather, binary search,
+                     classification, histogram) in one Pallas kernel; the
+                     per-item tricode array never materializes in HBM
+                     (:mod:`repro.kernels.census_fused`).
+
 Returned per device/shard: ``hist64`` (connected-triad tricode histogram)
 and ``inter`` (2-bin count of N(u)∩N(v) elements split by pair mutuality),
 from which the host assembles the exact 16-type census.
@@ -23,6 +33,8 @@ import numpy as np
 
 from repro.core.planner import CensusPlan
 from repro.core.tricode import FOLD_64_TO_16, NUM_CLASSES
+
+BACKENDS = ("jnp", "pallas", "pallas-fused")
 
 
 def segment_searchsorted(keys, lo, hi, q, iters: int):
@@ -49,7 +61,8 @@ def classify_items(indptr, packed, pair_u, pair_v, pair_code,
 
     tricode is in [0, 64); count_mask marks items contributing a connected
     triad under the canonical-selection predicate; inter_mask marks items
-    witnessing an element of N(u) ∩ N(v).
+    witnessing an element of N(u) ∩ N(v) on the pair's designated witness
+    side (bit 2 of ``pair_code``; 0 unless the plan is degree-oriented).
     """
     nbr_ids = packed >> 2
     w_packed = packed[item_slot]
@@ -58,7 +71,9 @@ def classify_items(indptr, packed, pair_u, pair_v, pair_code,
 
     u = pair_u[item_pair]
     v = pair_v[item_pair]
-    c_uv = pair_code[item_pair]
+    pc = pair_code[item_pair]
+    c_uv = pc & 3
+    inter_side = (pc >> 2) & 1
 
     other = jnp.where(item_side == 0, v, u)
     lo = indptr[other]
@@ -75,16 +90,19 @@ def classify_items(indptr, packed, pair_u, pair_v, pair_code,
     dedup = ~(found & (item_side == 1))      # union duplicates count once
     canonical = (v < w) | ((u < w) & (w < v) & (c_uw == 0))
     count_mask = item_valid & not_self & dedup & canonical
-    inter_mask = item_valid & not_self & found & (item_side == 0)
+    inter_mask = item_valid & not_self & found & (item_side == inter_side)
 
     tricode = c_uv * 16 + c_uw * 4 + c_vw
     return tricode, count_mask, inter_mask, c_uv == 3
 
 
 def census_partials(indptr, packed, pair_u, pair_v, pair_code,
-                    item_pair, item_slot, item_side, item_valid,
-                    search_iters: int, histogram_fn=None):
-    """Shard-local partials: (hist64 int32, inter2 int32)."""
+                    item_sp, item_pv, search_iters: int, histogram_fn=None):
+    """Shard-local partials from packed work items: (hist64, inter2) int32."""
+    item_slot = item_sp >> 1
+    item_side = item_sp & 1
+    item_pair = item_pv >> 1
+    item_valid = (item_pv & 1) == 1
     tricode, count_mask, inter_mask, is_mut = classify_items(
         indptr, packed, pair_u, pair_v, pair_code,
         item_pair, item_slot, item_side, item_valid, search_iters)
@@ -115,25 +133,39 @@ def assemble_census(plan: CensusPlan, hist64: np.ndarray,
     return census
 
 
-@functools.partial(jax.jit, static_argnames=("search_iters", "backend"))
-def _census_jit(indptr, packed, pair_u, pair_v, pair_code,
-                item_pair, item_slot, item_side, item_valid,
-                search_iters, backend):
+def partials_fn(backend: str, search_iters: int):
+    """Per-shard partials callable for ``backend`` — the single dispatch
+    point shared by the single-device and distributed drivers.  The
+    returned function maps the 7 device arrays (graph + pairs + packed
+    items) to ``(hist64, inter)``."""
+    if backend == "pallas-fused":
+        from repro.kernels import ops as kops
+        return functools.partial(kops.fused_census_partials,
+                                 search_iters=search_iters)
     histogram_fn = None
     if backend == "pallas":
         from repro.kernels import ops as kops
         histogram_fn = kops.tricode_histogram
-    return census_partials(indptr, packed, pair_u, pair_v, pair_code,
-                           item_pair, item_slot, item_side, item_valid,
-                           search_iters, histogram_fn=histogram_fn)
+    return functools.partial(census_partials, search_iters=search_iters,
+                             histogram_fn=histogram_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("search_iters", "backend"))
+def _census_jit(indptr, packed, pair_u, pair_v, pair_code,
+                item_sp, item_pv, search_iters, backend):
+    return partials_fn(backend, search_iters)(
+        indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
 
 
 def triad_census(plan: CensusPlan, backend: str = "jnp") -> np.ndarray:
     """Single-device exact 16-type triad census from a plan.
 
     ``backend='pallas'`` routes the histogram hot loop through the Pallas
-    kernel (interpret mode on CPU).
+    kernel; ``backend='pallas-fused'`` runs the whole per-item pipeline in
+    one Pallas kernel (both interpret mode on CPU).
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if plan.num_pairs == 0:
         n = plan.n
         out = np.zeros(NUM_CLASSES, dtype=np.int64)
@@ -141,6 +173,5 @@ def triad_census(plan: CensusPlan, backend: str = "jnp") -> np.ndarray:
         return out
     hist64, inter = _census_jit(
         plan.indptr, plan.packed, plan.pair_u, plan.pair_v, plan.pair_code,
-        plan.item_pair, plan.item_slot, plan.item_side, plan.item_valid,
-        plan.search_iters, backend)
+        plan.item_sp, plan.item_pv, plan.search_iters, backend)
     return assemble_census(plan, np.asarray(hist64), np.asarray(inter))

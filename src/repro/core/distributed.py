@@ -6,6 +6,12 @@ tricode histogram + 2-bin intersection counters, and a single ``psum``
 combines them — the paper's 64 hashed local census vectors, mapped onto the
 memory hierarchy of a pod: device-local partials in HBM/VMEM, one collective
 at the end.
+
+Work items travel as the planner's two packed int32 words per item
+(``item_sp``/``item_pv``), halving the host→device transfer and the sharded
+HBM footprint relative to the four legacy streams.  ``backend`` selects the
+same per-shard paths as :func:`repro.core.census.triad_census`, including
+``"pallas-fused"`` (the whole per-item pipeline in one kernel per shard).
 """
 
 from __future__ import annotations
@@ -16,9 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core.census import assemble_census, census_partials
+from repro.compat import shard_map
+from repro.core.census import BACKENDS, assemble_census, partials_fn
 from repro.core.planner import CensusPlan, build_plan
 from repro.core.digraph import CompactDigraph
 
@@ -33,18 +39,12 @@ def default_mesh() -> Mesh:
 @functools.partial(jax.jit,
                    static_argnames=("mesh", "search_iters", "backend"))
 def _sharded_census(indptr, packed, pair_u, pair_v, pair_code,
-                    item_pair, item_slot, item_side, item_valid,
-                    mesh, search_iters, backend):
+                    item_sp, item_pv, mesh, search_iters, backend):
     axes = mesh.axis_names
-    histogram_fn = None
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        histogram_fn = kops.tricode_histogram
+    partials = partials_fn(backend, search_iters)
 
-    def shard_fn(ip, pk, pu, pv, pc, wpair, wslot, wside, wvalid):
-        hist64, inter = census_partials(
-            ip, pk, pu, pv, pc, wpair, wslot, wside, wvalid,
-            search_iters, histogram_fn=histogram_fn)
+    def shard_fn(ip, pk, pu, pv, pc, wsp, wpv):
+        hist64, inter = partials(ip, pk, pu, pv, pc, wsp, wpv)
         hist64 = jax.lax.psum(hist64, axes)
         inter = jax.lax.psum(inter, axes)
         return hist64, inter
@@ -53,22 +53,25 @@ def _sharded_census(indptr, packed, pair_u, pair_v, pair_code,
     rep = P()                 # graph + pair arrays replicated
     fn = shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(rep, rep, rep, rep, rep,
-                  item_spec, item_spec, item_spec, item_spec),
-        out_specs=(rep, rep))
-    return fn(indptr, packed, pair_u, pair_v, pair_code,
-              item_pair, item_slot, item_side, item_valid)
+        in_specs=(rep, rep, rep, rep, rep, item_spec, item_spec),
+        out_specs=(rep, rep),
+        # pallas_call has no replication rule; keep the check on the
+        # pure-XLA path where it still can catch a missing psum
+        check_vma=(backend == "jnp"))
+    return fn(indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
 
 
 def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
                              backend: str = "jnp") -> np.ndarray:
     """Exact 16-type census computed across all devices of ``mesh``."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if mesh is None:
         mesh = default_mesh()
     ndev = int(np.prod(mesh.devices.shape))
-    if plan.item_valid.shape[0] % ndev != 0:
+    if plan.item_sp.shape[0] % ndev != 0:
         raise ValueError(
-            f"plan padded to {plan.item_valid.shape[0]} items, not a "
+            f"plan padded to {plan.item_sp.shape[0]} items, not a "
             f"multiple of {ndev} devices; build with pad_to=num_devices")
     if plan.num_pairs == 0:
         n = plan.n
@@ -82,17 +85,17 @@ def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
         dev(plan.indptr, rep), dev(plan.packed, rep),
         dev(plan.pair_u, rep), dev(plan.pair_v, rep),
         dev(plan.pair_code, rep),
-        dev(plan.item_pair, sharding), dev(plan.item_slot, sharding),
-        dev(plan.item_side, sharding), dev(plan.item_valid, sharding),
+        dev(plan.item_sp, sharding), dev(plan.item_pv, sharding),
         mesh, plan.search_iters, backend)
     return assemble_census(plan, np.asarray(hist64), np.asarray(inter))
 
 
 def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
-                       backend: str = "jnp") -> np.ndarray:
+                       backend: str = "jnp",
+                       orient: str = "none") -> np.ndarray:
     """Convenience: plan + distribute + count in one call."""
     if mesh is None:
         mesh = default_mesh()
     ndev = int(np.prod(mesh.devices.shape))
-    plan = build_plan(g, pad_to=ndev)
+    plan = build_plan(g, pad_to=ndev, orient=orient)
     return triad_census_distributed(plan, mesh=mesh, backend=backend)

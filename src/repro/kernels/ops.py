@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.census_fused import census_fused_kernel
+from repro.kernels.census_fused import BLOCK_ITEMS as FUSED_BLOCK_ITEMS
 from repro.kernels.tricode_hist import (
     BLOCK_ITEMS, tricode_histogram_kernel)
 from repro.kernels.pair_codes import LANES, TILE_B, pair_codes_kernel
@@ -54,6 +56,32 @@ def pair_codes(q: jax.Array, k: jax.Array, kc: jax.Array,
         kc = jnp.concatenate([kc, zc])
     out = pair_codes_kernel(q, k, kc, interpret=interpret)
     return out[:b]
+
+
+def fused_census_partials(indptr, packed, pair_u, pair_v, pair_code,
+                          item_sp, item_pv, search_iters: int,
+                          interpret: bool | None = None):
+    """Fused single-pass census partials: ``(hist64 (64,), inter (2,))``.
+
+    Drop-in replacement for :func:`repro.core.census.census_partials`
+    (backend ``"pallas-fused"``): gather, binary search, classification
+    and histogram all happen inside one Pallas kernel.  Pads the packed
+    work-item words to the kernel block; zero words decode to
+    ``valid == 0`` so padding contributes nothing.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    w = item_sp.shape[0]
+    pad = (-w) % FUSED_BLOCK_ITEMS
+    item_sp = item_sp.astype(jnp.int32)
+    item_pv = item_pv.astype(jnp.int32)
+    if pad:
+        zeros = jnp.zeros((pad,), jnp.int32)
+        item_sp = jnp.concatenate([item_sp, zeros])
+        item_pv = jnp.concatenate([item_pv, zeros])
+    return census_fused_kernel(indptr, packed, pair_u, pair_v, pair_code,
+                               item_sp, item_pv, search_iters,
+                               interpret=interpret)
 
 
 # re-export oracles for test symmetry
