@@ -185,6 +185,87 @@ def fused_vs_reference(rows: list):
                      "default plan)"))
 
 
+def streaming_vs_monolithic(rows: list):
+    """Tentpole rows: streamed (chunked out-of-core) vs monolithic census.
+
+    The monolithic path materializes the whole O(W) plan and ships it in
+    one dispatch; streaming caps the per-dispatch packed-item bytes at
+    ``8 * max_items`` and accumulates per-chunk partials.  The sweep
+    includes a budget the monolithic plan exceeds by >= 8x, and asserts
+    bit-identical censuses plus a compile-once chunk step.
+    """
+    from repro.core import CensusEngine, pair_space
+
+    g = paper_workload("webgraph", n=6_000, avg_degree=10.0, seed=0)
+    w_pre = pair_space(g).num_items_preprune
+    mono = CensusEngine(backend="jnp")
+    dt_mono, c_mono = _timeit(mono.run, g)
+    rows.append(("stream_monolithic", dt_mono * 1e6,
+                 f"plan_bytes={mono.stats.peak_plan_bytes};"
+                 f"items={mono.stats.items}"))
+    for frac in (8, 32):
+        engine = CensusEngine(backend="jnp")
+        max_items = -(-w_pre // frac)
+        # compile-once gate on the FIRST (un-warmed) run: a per-chunk
+        # recompilation regression compiles one entry per chunk here,
+        # before _timeit's warmup can mask it in the cache
+        c = engine.run(g, max_items=max_items)
+        compiles_first = engine.stats.step_compiles
+        if compiles_first > 1:
+            raise AssertionError(
+                f"per-chunk recompilation: {compiles_first} "
+                f"compiles for {engine.stats.chunks} chunks")
+        dt, c = _timeit(engine.run, g, max_items=max_items)
+        st = engine.stats
+        if not (c == c_mono).all():
+            raise AssertionError(f"streamed census mismatch at 1/{frac}")
+        # the 1/32 budget demonstrates a workload whose monolithic plan
+        # is >= 8x the chunk budget (pruning keeps the 1/8 run near ~7x)
+        if frac >= 32 and st.monolithic_plan_bytes < 8 * st.peak_plan_bytes:
+            raise AssertionError(
+                f"budget not demonstrated: monolithic "
+                f"{st.monolithic_plan_bytes} < 8x peak "
+                f"{st.peak_plan_bytes}")
+        rows.append((f"stream_budget_1_{frac}", dt * 1e6,
+                     f"chunks={st.chunks};"
+                     f"peak_plan_bytes={st.peak_plan_bytes};"
+                     f"monolithic_bytes={st.monolithic_plan_bytes};"
+                     f"chunk_max_over_mean={st.chunk_max_over_mean:.3f};"
+                     f"step_compiles={compiles_first}"))
+
+
+def streaming_smoke(rows: list):
+    """CI gate (benchmarks/check.sh): tiny graph, a max_items budget that
+    forces >= 4 chunks (with intra-pair splits), parity-checked against
+    the monolithic census on the jnp and pallas-fused backends."""
+    from repro.core import CensusEngine, pair_space
+
+    g = paper_workload("orkut", n=400, avg_degree=12.0, seed=0)
+    want = triad_census(build_plan(g))
+    w_pre = pair_space(g).num_items_preprune
+    max_items = max(w_pre // 6, 1)
+    for backend in ("jnp", "pallas-fused"):
+        engine = CensusEngine(backend=backend)
+        # first run is un-warmed: per-chunk recompilation shows up here
+        got = engine.run(g, max_items=max_items)
+        compiles_first = engine.stats.step_compiles
+        if compiles_first > 1:
+            raise AssertionError(
+                f"per-chunk recompilation on {backend}: "
+                f"{compiles_first} compiles for "
+                f"{engine.stats.chunks} chunks")
+        dt, got = _timeit(engine.run, g, max_items=max_items)
+        st = engine.stats
+        if not (got == want).all():
+            raise AssertionError(f"streamed {backend} != monolithic")
+        if st.chunks < 4:
+            raise AssertionError(f"smoke too coarse: {st.chunks} chunks")
+        rows.append((f"stream_smoke_{backend}", dt * 1e6,
+                     f"chunks={st.chunks};items={st.items};"
+                     f"peak_plan_bytes={st.peak_plan_bytes};"
+                     f"step_compiles={compiles_first};parity=ok"))
+
+
 def run(rows: list):
     fig6_degree_distributions(rows)
     fig9_balance(rows)
@@ -195,6 +276,7 @@ def run(rows: list):
     om_scaling(rows)
     kernel_throughput(rows)
     fused_vs_reference(rows)
+    streaming_vs_monolithic(rows)
 
 
 def run_smoke(rows: list):

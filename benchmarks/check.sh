@@ -1,11 +1,19 @@
 #!/usr/bin/env bash
-# CI regression gate: tier-1 tests + a fast census benchmark smoke subset.
+# CI regression gate: tier-1 tests + a fast census benchmark smoke subset
+# + a streaming-execution smoke.
 #
 # The smoke subset (benchmarks/run.py --smoke) runs the tricode-histogram
 # kernel throughput comparison and the fused-vs-reference census columns on
 # reduced workloads; the fused path asserts bit-identical censuses against
 # the jnp backend, so a correctness regression in the fused kernel or the
 # degree-oriented planner fails this script without the full benchmark.
+#
+# The streaming smoke (benchmarks/run.py --streaming-smoke) runs the
+# chunked out-of-core engine on a small graph with a max_items budget
+# forcing >= 4 chunks (including intra-pair splits) and asserts the
+# streamed census is bit-identical to the monolithic dispatch on both the
+# jnp and pallas-fused backends, with the per-chunk step compiled at most
+# once — so the chunked path can never silently rot.
 #
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
@@ -18,3 +26,6 @@ python -m pytest -x -q
 
 echo "== census benchmark smoke subset =="
 python -m benchmarks.run --smoke
+
+echo "== streaming census smoke (chunked == monolithic) =="
+python -m benchmarks.run --streaming-smoke

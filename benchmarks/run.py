@@ -16,11 +16,16 @@ def main() -> None:
                     help="census benchmarks only")
     ap.add_argument("--smoke", action="store_true",
                     help="fast census smoke subset (CI regression gate)")
+    ap.add_argument("--streaming-smoke", action="store_true",
+                    help="streamed-vs-monolithic parity gate: tiny graph, "
+                         "a max_items budget forcing >= 4 chunks")
     args = ap.parse_args()
 
     rows: list = []
     from benchmarks import census_bench
-    if args.smoke:
+    if args.streaming_smoke:
+        census_bench.streaming_smoke(rows)
+    elif args.smoke:
         census_bench.run_smoke(rows)
     else:
         census_bench.run(rows)

@@ -6,12 +6,20 @@ Public API::
     plan = build_plan(g, pad_to=num_devices)    # manhattan-collapse plan
     census = triad_census(plan)                 # single device
     census = triad_census_distributed(plan, mesh)   # sharded + psum
+
+    # out-of-core: never materialize the O(W) plan — stream bounded chunks
+    engine = CensusEngine(mesh, backend="pallas-fused")
+    census = engine.run(g, max_items=10_000_000)
+    engine.stats.summary()                      # chunks, peak plan bytes
 """
 
 from repro.core.digraph import CompactDigraph, from_edges, from_dense, to_dense
 from repro.core.planner import (
-    CensusPlan, build_plan, pack_items, unpack_items)
+    CensusPlan, PairSpace, build_plan, emit_items, pack_items, pair_space,
+    unpack_items)
+from repro.core.plan_stream import PlanChunk, PlanChunker, iter_plan_chunks
 from repro.core.census import triad_census, assemble_census
+from repro.core.engine import CensusEngine, EngineStats
 from repro.core.distributed import (
     triad_census_distributed, triad_census_graph, default_mesh)
 from repro.core.census_ref import (
@@ -24,7 +32,10 @@ from repro.core.temporal import TriadMonitor, SECURITY_PATTERNS
 
 __all__ = [
     "CompactDigraph", "from_edges", "from_dense", "to_dense",
-    "CensusPlan", "build_plan", "pack_items", "unpack_items",
+    "CensusPlan", "PairSpace", "build_plan", "emit_items", "pack_items",
+    "pair_space", "unpack_items",
+    "PlanChunk", "PlanChunker", "iter_plan_chunks",
+    "CensusEngine", "EngineStats",
     "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",

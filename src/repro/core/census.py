@@ -21,6 +21,12 @@ Backends:
 Returned per device/shard: ``hist64`` (connected-triad tricode histogram)
 and ``inter`` (2-bin count of N(u)∩N(v) elements split by pair mutuality),
 from which the host assembles the exact 16-type census.
+
+Dispatch lives in :class:`repro.core.engine.CensusEngine`, which runs these
+partials either as one monolithic plan dispatch or as a stream of bounded
+fixed-shape chunks accumulated on the host (the partials are integer sums,
+so any chunking of the work items yields bit-identical censuses).
+:func:`triad_census` below is the thin single-device wrapper.
 """
 
 from __future__ import annotations
@@ -32,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.planner import CensusPlan
-from repro.core.tricode import FOLD_64_TO_16, NUM_CLASSES
+from repro.core.tricode import FOLD_64_TO_16
 
 BACKENDS = ("jnp", "pallas", "pallas-fused")
 
@@ -119,18 +125,27 @@ def census_partials(indptr, packed, pair_u, pair_v, pair_code,
     return hist64, inter
 
 
-def assemble_census(plan: CensusPlan, hist64: np.ndarray,
-                    inter: np.ndarray) -> np.ndarray:
-    """Combine device partials with host closed forms into the 16 counts."""
+def assemble_counts(n: int, base_asym: int, base_mut: int,
+                    hist64: np.ndarray, inter: np.ndarray) -> np.ndarray:
+    """Combine (accumulated) device partials with the closed-form bases
+    into the 16 counts — the plan-free core of :func:`assemble_census`,
+    used by the streaming engine where the bases arrive as per-chunk
+    additive shares."""
     hist64 = np.asarray(hist64, dtype=np.int64)
     inter = np.asarray(inter, dtype=np.int64)
     census = FOLD_64_TO_16 @ hist64
-    census[1] += plan.base_asym + int(inter[0])   # 012
-    census[2] += plan.base_mut + int(inter[1])    # 102
-    n = plan.n
+    census[1] += base_asym + int(inter[0])   # 012
+    census[2] += base_mut + int(inter[1])    # 102
     total = n * (n - 1) * (n - 2) // 6
     census[0] = total - census[1:].sum()
     return census
+
+
+def assemble_census(plan: CensusPlan, hist64: np.ndarray,
+                    inter: np.ndarray) -> np.ndarray:
+    """Combine device partials with host closed forms into the 16 counts."""
+    return assemble_counts(plan.n, plan.base_asym, plan.base_mut,
+                           hist64, inter)
 
 
 def partials_fn(backend: str, search_iters: int):
@@ -150,28 +165,13 @@ def partials_fn(backend: str, search_iters: int):
                              histogram_fn=histogram_fn)
 
 
-@functools.partial(jax.jit, static_argnames=("search_iters", "backend"))
-def _census_jit(indptr, packed, pair_u, pair_v, pair_code,
-                item_sp, item_pv, search_iters, backend):
-    return partials_fn(backend, search_iters)(
-        indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
-
-
 def triad_census(plan: CensusPlan, backend: str = "jnp") -> np.ndarray:
     """Single-device exact 16-type triad census from a plan.
 
-    ``backend='pallas'`` routes the histogram hot loop through the Pallas
-    kernel; ``backend='pallas-fused'`` runs the whole per-item pipeline in
-    one Pallas kernel (both interpret mode on CPU).
+    Thin wrapper over :class:`repro.core.engine.CensusEngine` (mesh-less,
+    monolithic).  ``backend='pallas'`` routes the histogram hot loop
+    through the Pallas kernel; ``backend='pallas-fused'`` runs the whole
+    per-item pipeline in one Pallas kernel (both interpret mode on CPU).
     """
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
-    if plan.num_pairs == 0:
-        n = plan.n
-        out = np.zeros(NUM_CLASSES, dtype=np.int64)
-        out[0] = n * (n - 1) * (n - 2) // 6
-        return out
-    hist64, inter = _census_jit(
-        plan.indptr, plan.packed, plan.pair_u, plan.pair_v, plan.pair_code,
-        plan.item_sp, plan.item_pv, plan.search_iters, backend)
-    return assemble_census(plan, np.asarray(hist64), np.asarray(inter))
+    from repro.core.engine import CensusEngine
+    return CensusEngine(mesh=None, backend=backend).run_plan(plan)

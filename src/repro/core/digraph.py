@@ -50,10 +50,20 @@ class CompactDigraph:
         deg = self.degrees
         assert (deg >= 0).all() and self.indptr[-1] == self.packed.shape[0]
         nbr = self.packed >> 2
-        # rows sorted strictly (no duplicate neighbors within a row)
-        for u in range(self.n):
-            row = nbr[self.indptr[u]:self.indptr[u + 1]]
-            assert (np.diff(row) > 0).all(), f"row {u} not strictly sorted"
+        # rows sorted strictly (no duplicate neighbors within a row) —
+        # vectorized: every adjacent CSR entry must increase unless the
+        # boundary between two rows falls there
+        if nbr.shape[0] > 1:
+            rising = np.diff(nbr) > 0
+            crossing = np.zeros(nbr.shape[0] - 1, dtype=bool)
+            bounds = np.asarray(self.indptr[1:-1], dtype=np.int64)
+            bounds = bounds[(bounds > 0) & (bounds < nbr.shape[0])]
+            crossing[bounds - 1] = True
+            bad = ~(rising | crossing)
+            if bad.any():
+                at = np.nonzero(bad)[0][0]
+                u = int(np.searchsorted(self.indptr, at, side="right") - 1)
+                raise AssertionError(f"row {u} not strictly sorted")
         assert ((self.packed & 3) != 0).all(), "zero dir code"
 
 
@@ -119,8 +129,12 @@ def from_dense(a: np.ndarray) -> CompactDigraph:
 
 def to_dense(g: CompactDigraph) -> np.ndarray:
     a = np.zeros((g.n, g.n), dtype=bool)
-    for u in range(g.n):
-        nb, cd = g.neighbors(u), g.codes(u)
-        a[u, nb[(cd & 1) != 0]] = True
-        a[nb[(cd & 2) != 0], u] = True
+    if g.packed.size:
+        rows = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees)
+        nbr = g.packed >> 2
+        code = g.packed & 3
+        out = (code & 1) != 0
+        a[rows[out], nbr[out]] = True
+        inc = (code & 2) != 0
+        a[nbr[inc], rows[inc]] = True
     return a

@@ -1,11 +1,18 @@
-"""Distributed triad census: shard_map over a device mesh.
+"""Distributed triad census: thin wrappers over the streaming engine.
 
-The flat work plan is split into equal chunks across every device of the
-mesh (all axes flattened); each device computes its privatized 64-bin
-tricode histogram + 2-bin intersection counters, and a single ``psum``
-combines them — the paper's 64 hashed local census vectors, mapped onto the
-memory hierarchy of a pod: device-local partials in HBM/VMEM, one collective
-at the end.
+The actual dispatch — shard_map over a device mesh, privatized 64-bin
+tricode histograms + 2-bin intersection counters per device, one ``psum``
+at the end (the paper's 64 hashed local census vectors mapped onto a pod's
+memory hierarchy) — lives in :class:`repro.core.engine.CensusEngine`,
+shared with the single-device driver.  What remains here is the public
+distributed API:
+
+* :func:`triad_census_distributed` — exact census of a prebuilt
+  (monolithic) plan across every device of a mesh.
+* :func:`triad_census_graph` — plan + count in one call; pass
+  ``max_items`` to stream the plan as bounded chunks instead of one
+  O(W) dispatch (see :mod:`repro.core.plan_stream`), with per-chunk
+  uploads sharded over the mesh and partials accumulated on the host.
 
 Work items travel as the planner's two packed int32 words per item
 (``item_sp``/``item_pv``), halving the host→device transfer and the sharded
@@ -16,16 +23,11 @@ same per-shard paths as :func:`repro.core.census.triad_census`, including
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from repro.core.census import BACKENDS, assemble_census, partials_fn
-from repro.core.planner import CensusPlan, build_plan
+from repro.core.planner import CensusPlan
 from repro.core.digraph import CompactDigraph
 
 
@@ -36,66 +38,27 @@ def default_mesh() -> Mesh:
                          axis_types=(jax.sharding.AxisType.Auto,))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mesh", "search_iters", "backend"))
-def _sharded_census(indptr, packed, pair_u, pair_v, pair_code,
-                    item_sp, item_pv, mesh, search_iters, backend):
-    axes = mesh.axis_names
-    partials = partials_fn(backend, search_iters)
-
-    def shard_fn(ip, pk, pu, pv, pc, wsp, wpv):
-        hist64, inter = partials(ip, pk, pu, pv, pc, wsp, wpv)
-        hist64 = jax.lax.psum(hist64, axes)
-        inter = jax.lax.psum(inter, axes)
-        return hist64, inter
-
-    item_spec = P(axes)       # work items sharded over every mesh axis
-    rep = P()                 # graph + pair arrays replicated
-    fn = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(rep, rep, rep, rep, rep, item_spec, item_spec),
-        out_specs=(rep, rep),
-        # pallas_call has no replication rule; keep the check on the
-        # pure-XLA path where it still can catch a missing psum
-        check_vma=(backend == "jnp"))
-    return fn(indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
-
-
 def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
                              backend: str = "jnp") -> np.ndarray:
     """Exact 16-type census computed across all devices of ``mesh``."""
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
-    ndev = int(np.prod(mesh.devices.shape))
-    if plan.item_sp.shape[0] % ndev != 0:
-        raise ValueError(
-            f"plan padded to {plan.item_sp.shape[0]} items, not a "
-            f"multiple of {ndev} devices; build with pad_to=num_devices")
-    if plan.num_pairs == 0:
-        n = plan.n
-        out = np.zeros(16, dtype=np.int64)
-        out[0] = n * (n - 1) * (n - 2) // 6
-        return out
-    sharding = NamedSharding(mesh, P(mesh.axis_names))
-    rep = NamedSharding(mesh, P())
-    dev = lambda a, s: jax.device_put(jnp.asarray(a), s)
-    hist64, inter = _sharded_census(
-        dev(plan.indptr, rep), dev(plan.packed, rep),
-        dev(plan.pair_u, rep), dev(plan.pair_v, rep),
-        dev(plan.pair_code, rep),
-        dev(plan.item_sp, sharding), dev(plan.item_pv, sharding),
-        mesh, plan.search_iters, backend)
-    return assemble_census(plan, np.asarray(hist64), np.asarray(inter))
+    return CensusEngine(mesh=mesh, backend=backend).run_plan(plan)
 
 
 def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
-                       backend: str = "jnp",
-                       orient: str = "none") -> np.ndarray:
-    """Convenience: plan + distribute + count in one call."""
+                       backend: str = "jnp", orient: str = "none",
+                       max_items: int | None = None,
+                       progress=None) -> np.ndarray:
+    """Convenience: plan + distribute + count in one call.
+
+    ``max_items=None`` reproduces the historical monolithic dispatch;
+    an integer budget streams the plan in O(max_items) host memory.
+    """
+    from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
-    ndev = int(np.prod(mesh.devices.shape))
-    plan = build_plan(g, pad_to=ndev, orient=orient)
-    return triad_census_distributed(plan, mesh=mesh, backend=backend)
+    engine = CensusEngine(mesh=mesh, backend=backend)
+    return engine.run(g, max_items=max_items, orient=orient,
+                      progress=progress)

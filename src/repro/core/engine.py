@@ -1,0 +1,302 @@
+"""Streaming census engine: unified multi-chunk execution, all backends.
+
+:class:`CensusEngine` is the single owner of device dispatch for the triad
+census.  It subsumes what used to be two parallel drivers (the
+single-device path in :mod:`repro.core.census` and the sharded path in
+:mod:`repro.core.distributed` — both are now thin wrappers over it) and
+adds the out-of-core mode that the monolithic drivers could not express:
+
+* **Monolithic** (``max_items=None``): one plan, one dispatch — exactly
+  the historical behavior, for plans that fit.
+* **Streamed** (``max_items=N``): the plan is never materialized whole.
+  :class:`repro.core.plan_stream.PlanChunker` slices the pre-prune item
+  space into bounded chunks; the engine uploads the chunk-invariant graph
+  and pair arrays once, runs one jitted fixed-shape partials step per
+  chunk (every chunk is padded to the same ``chunk_shape``, so the step
+  compiles exactly once; item buffers are donated for HBM reuse), overlaps
+  the host-side generation + upload of chunk k+1 with the device compute
+  of chunk k, and accumulates the ``hist64``/``inter`` partials in int64
+  on the host.  Peak plan memory is O(max_items) instead of O(W).
+
+Partials are perfectly mergeable across chunks (integer histogram sums and
+additive closed-form bases), so the streamed census is bit-identical to
+the monolithic dispatch for every backend (``jnp``, ``pallas``,
+``pallas-fused``), both orient modes, and any chunk size — enforced by
+``tests/test_streaming.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.census import (
+    BACKENDS, assemble_census, assemble_counts, partials_fn)
+from repro.core.digraph import CompactDigraph
+from repro.core.planner import CensusPlan, build_plan
+from repro.core.plan_stream import PlanChunker
+
+
+def _chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
+                     item_sp, item_pv, mesh, search_iters, backend):
+    """One fixed-shape partials dispatch: ``(hist64, inter)`` int32.
+
+    ``mesh=None`` runs single-device; otherwise the items are shard_mapped
+    over every mesh axis with replicated graph/pair arrays and a final
+    psum — the paper's privatized census vectors, one collective at the
+    end.
+    """
+    partials = partials_fn(backend, search_iters)
+    if mesh is None:
+        return partials(indptr, packed, pair_u, pair_v, pair_code,
+                        item_sp, item_pv)
+
+    axes = mesh.axis_names
+
+    def shard_fn(ip, pk, pu, pv, pc, wsp, wpv):
+        hist64, inter = partials(ip, pk, pu, pv, pc, wsp, wpv)
+        return jax.lax.psum(hist64, axes), jax.lax.psum(inter, axes)
+
+    item_spec = P(axes)       # work items sharded over every mesh axis
+    rep = P()                 # graph + pair arrays replicated
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(rep, rep, rep, rep, rep, item_spec, item_spec),
+        out_specs=(rep, rep),
+        # pallas_call has no replication rule; keep the check on the
+        # pure-XLA path where it still can catch a missing psum
+        check_vma=(backend == "jnp"))
+    return fn(indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
+
+
+_STATIC = ("mesh", "search_iters", "backend")
+#: donated variant: each chunk's packed item buffers hand their HBM to the
+#: next upload (accelerators only — XLA:CPU cannot alias donated inputs,
+#: so the plain variant avoids a per-chunk "unusable donation" warning)
+_chunk_step_donated = functools.partial(
+    jax.jit, static_argnames=_STATIC,
+    donate_argnames=("item_sp", "item_pv"))(_chunk_step_impl)
+_chunk_step_plain = functools.partial(
+    jax.jit, static_argnames=_STATIC)(_chunk_step_impl)
+
+
+def _chunk_step(mesh=None):
+    """The per-chunk jitted step for the platform the work runs on —
+    the mesh's device platform when sharded, the default backend when
+    single-device."""
+    platform = (mesh.devices.flat[0].platform if mesh is not None
+                else jax.default_backend())
+    return _chunk_step_plain if platform == "cpu" else _chunk_step_donated
+
+
+def _jit_cache_size(step) -> int:
+    """Compile counter via jax's private ``_cache_size`` — if a jax
+    upgrade drops it, only the ``step_compiles`` stat degrades (to 0),
+    never the census itself."""
+    return getattr(step, "_cache_size", lambda: 0)()
+
+
+#: bytes per packed work item (two int32 words)
+ITEM_BYTES = 8
+
+
+@dataclass
+class EngineStats:
+    """Execution stats of the last :class:`CensusEngine` run.
+
+    ``peak_plan_bytes`` is the packed-item bytes resident per dispatch
+    (the streaming memory ceiling the ``max_items`` knob tunes);
+    ``monolithic_plan_bytes`` is what a single dispatch of the same work
+    would have shipped.  ``step_compiles`` counts fresh compilations of
+    the per-chunk step during the run — 0 or 1 for a streamed run, never
+    one per chunk (fixed chunk shapes).
+    """
+
+    backend: str
+    ndev: int
+    orient: str
+    streamed: bool
+    max_items: int | None
+    chunks: int
+    chunk_shape: int           #: padded items per dispatch
+    items: int                 #: total valid work items processed
+    chunk_items: list[int] = field(default_factory=list)
+    peak_plan_bytes: int = 0
+    monolithic_plan_bytes: int = 0
+    step_compiles: int = 0
+
+    @property
+    def chunk_max_over_mean(self) -> float:
+        """Streamed-schedule imbalance (1.0 == perfectly even chunks)."""
+        if not self.chunk_items or not sum(self.chunk_items):
+            return 1.0
+        mean = sum(self.chunk_items) / len(self.chunk_items)
+        return max(self.chunk_items) / mean
+
+    def summary(self) -> str:
+        mode = (f"streamed max_items={self.max_items}" if self.streamed
+                else "monolithic")
+        return (f"{self.backend} [{mode}] chunks={self.chunks} "
+                f"items={self.items} "
+                f"peak_plan_bytes={self.peak_plan_bytes} "
+                f"(monolithic {self.monolithic_plan_bytes}) "
+                f"chunk_max_over_mean={self.chunk_max_over_mean:.3f} "
+                f"step_compiles={self.step_compiles}")
+
+
+class CensusEngine:
+    """Owns mesh + backend dispatch for monolithic and streamed censuses.
+
+    ``mesh=None`` executes on the default device; a :class:`Mesh` shards
+    every chunk's items across all mesh axes.  After each ``run`` /
+    ``run_plan`` the execution record is available as :attr:`stats`.
+    """
+
+    def __init__(self, mesh: Mesh | None = None, backend: str = "jnp"):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; one of {BACKENDS}")
+        self.mesh = mesh
+        self.backend = backend
+        self.stats: EngineStats | None = None
+
+    @property
+    def ndev(self) -> int:
+        return 1 if self.mesh is None else int(
+            np.prod(self.mesh.devices.shape))
+
+    # ------------------------------------------------------------- helpers
+    def _shardings(self):
+        """(replicated, item-sharded) NamedShardings, or (None, None)."""
+        if self.mesh is None:
+            return None, None
+        return (NamedSharding(self.mesh, P()),
+                NamedSharding(self.mesh, P(self.mesh.axis_names)))
+
+    def _put(self, a, sharding):
+        arr = jnp.asarray(a)
+        return arr if sharding is None else jax.device_put(arr, sharding)
+
+    def _mono_stats(self, plan: CensusPlan,
+                    max_items: int | None = None) -> EngineStats:
+        wp = int(plan.item_sp.shape[0])
+        return EngineStats(
+            backend=self.backend, ndev=self.ndev, orient=plan.orient,
+            streamed=False, max_items=max_items,
+            chunks=1 if plan.num_items else 0, chunk_shape=wp,
+            items=plan.num_items,
+            chunk_items=[plan.num_items] if plan.num_items else [],
+            peak_plan_bytes=ITEM_BYTES * wp,
+            monolithic_plan_bytes=ITEM_BYTES * wp)
+
+    # ------------------------------------------------------------- running
+    def run_plan(self, plan: CensusPlan) -> np.ndarray:
+        """Exact 16-type census from a prebuilt (monolithic) plan."""
+        wp = int(plan.item_sp.shape[0])
+        if self.mesh is not None and wp % self.ndev != 0:
+            raise ValueError(
+                f"plan padded to {wp} items, not a multiple of "
+                f"{self.ndev} devices; build with pad_to=num_devices")
+        self.stats = self._mono_stats(plan)
+        if plan.num_pairs == 0 or plan.num_items == 0:
+            # zero-work plans (incl. pairs whose items were all pruned)
+            # resolve entirely from the host closed forms — the device is
+            # never dispatched on zero-length item arrays
+            return assemble_census(plan, np.zeros(64, np.int64),
+                                   np.zeros(2, np.int64))
+        rep, item_sh = self._shardings()
+        step = _chunk_step(self.mesh)
+        cache0 = _jit_cache_size(step)
+        hist64, inter = step(
+            self._put(plan.indptr, rep), self._put(plan.packed, rep),
+            self._put(plan.pair_u, rep), self._put(plan.pair_v, rep),
+            self._put(plan.pair_code, rep),
+            self._put(plan.item_sp, item_sh),
+            self._put(plan.item_pv, item_sh),
+            self.mesh, plan.search_iters, self.backend)
+        census = assemble_census(plan, np.asarray(hist64),
+                                 np.asarray(inter))
+        self.stats.step_compiles = _jit_cache_size(step) - cache0
+        return census
+
+    def run(self, g: CompactDigraph, *, max_items: int | None = None,
+            orient: str = "none", prune_self: bool = True,
+            progress=None) -> np.ndarray:
+        """Plan + count ``g`` end to end.
+
+        ``max_items=None`` builds one monolithic plan (O(W) host memory);
+        an integer budget streams bounded chunks instead (O(max_items)).
+        ``progress(chunk_index, num_chunks, chunk_valid_items)`` is called
+        as each chunk is dispatched.
+        """
+        if max_items is None:
+            plan = build_plan(g, pad_to=self.ndev, orient=orient,
+                              prune_self=prune_self)
+            return self.run_plan(plan)
+        chunker = PlanChunker(g, max_items, orient=orient,
+                              pad_to=self.ndev, prune_self=prune_self)
+        return self._run_stream(chunker, progress)
+
+    def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
+        space = chunker.space
+        self.stats = EngineStats(
+            backend=self.backend, ndev=self.ndev, orient=space.orient,
+            streamed=True, max_items=chunker.max_items,
+            chunks=chunker.num_chunks, chunk_shape=chunker.chunk_shape,
+            items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape)
+        if chunker.num_chunks == 0:
+            return assemble_counts(space.n, 0, 0, np.zeros(64, np.int64),
+                                   np.zeros(2, np.int64))
+
+        rep, item_sh = self._shardings()
+        # chunk-invariant graph + pair arrays: uploaded once, reused by
+        # every chunk step (replicated across the mesh when sharded)
+        graph_dev = tuple(self._put(a, rep)
+                          for a in chunker.device_arrays())
+
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        base_asym = base_mut = 0
+        chunk_items: list[int] = []
+        step = _chunk_step(self.mesh)
+        cache0 = _jit_cache_size(step)
+        pending = None
+        for chunk in chunker:
+            base_asym += chunk.base_asym
+            base_mut += chunk.base_mut
+            chunk_items.append(chunk.num_items)
+            if progress is not None:
+                progress(chunk.index, chunker.num_chunks, chunk.num_items)
+            if chunk.num_items == 0:
+                # fully-pruned chunk: its bases are credited above, the
+                # all-invalid items contribute nothing — skip the dispatch
+                # (mirrors the monolithic zero-work short-circuit)
+                continue
+            # upload + dispatch chunk k while chunk k-1 still computes
+            # (dispatch is async; we only block when accumulating k-1)
+            sp_dev = self._put(chunk.item_sp, item_sh)
+            pv_dev = self._put(chunk.item_pv, item_sh)
+            fut = step(*graph_dev, sp_dev, pv_dev,
+                       self.mesh, space.search_iters, self.backend)
+            if pending is not None:
+                hist_acc += np.asarray(pending[0], dtype=np.int64)
+                inter_acc += np.asarray(pending[1], dtype=np.int64)
+            pending = fut
+        if pending is not None:
+            hist_acc += np.asarray(pending[0], dtype=np.int64)
+            inter_acc += np.asarray(pending[1], dtype=np.int64)
+
+        st = self.stats
+        st.step_compiles = _jit_cache_size(step) - cache0
+        st.chunk_items = chunk_items
+        st.items = int(sum(chunk_items))
+        mono_wp = -(-st.items // self.ndev) * self.ndev
+        st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
+        return assemble_counts(space.n, base_asym, base_mut,
+                               hist_acc, inter_acc)

@@ -1,0 +1,135 @@
+"""Chunked out-of-core planning: bounded slices of the census plan.
+
+:func:`repro.core.planner.build_plan` materializes the whole O(W) flat work
+plan at once — W is Σ (deg u + deg v) over adjacent pairs, which on a
+10M-edge power-law graph already dwarfs host RAM and single-dispatch HBM.
+This module slices the same canonical-pair iteration space into contiguous
+*pre-prune item ranges* of at most ``max_items`` items each, so peak host
+memory for the item arrays is O(max_items) regardless of W (the standard
+bounded-batch strategy of the streaming triangle-counting literature,
+e.g. arXiv:1308.2166).
+
+Key properties:
+
+* **Exact partition.**  Chunk items are exactly the monolithic plan's items,
+  split by pre-prune index; histograms and intersection counters are
+  integer sums, so accumulating per-chunk partials is bit-identical to the
+  single dispatch.
+* **Intra-pair splits.**  Boundaries fall at arbitrary item indices, so a
+  hub pair whose item count exceeds ``max_items`` simply spans several
+  chunks — no chunk can overflow the budget.
+* **Additive bases.**  The closed-form dyadic bases (``base_asym`` /
+  ``base_mut``) are credited to the chunk containing each pair's first
+  pre-prune item and sum exactly to the global bases.
+* **Fixed chunk shape.**  Every chunk's packed item arrays are padded to
+  the same ``chunk_shape`` (``max_items`` rounded up to ``pad_to``), so the
+  per-chunk device step compiles once (see
+  :class:`repro.core.engine.CensusEngine`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.digraph import CompactDigraph
+from repro.core.planner import (
+    PairSpace, emit_items, pad_and_pack, pair_space)
+
+
+@dataclass(frozen=True)
+class PlanChunk:
+    """One bounded slice of the flat work plan.
+
+    ``item_sp``/``item_pv`` are the planner's packed words, padded with
+    invalid (all-zero) items to the chunker's fixed ``chunk_shape``.
+    ``base_asym``/``base_mut`` are this chunk's additive share of the
+    closed-form dyadic terms.
+    """
+
+    index: int                 #: chunk number, 0-based
+    num_chunks: int
+    start: int                 #: pre-prune item range [start, stop)
+    stop: int
+    num_items: int             #: valid (post-prune) items in this chunk
+    item_sp: np.ndarray        #: (chunk_shape,) int32
+    item_pv: np.ndarray        #: (chunk_shape,) int32
+    base_asym: int
+    base_mut: int
+
+
+class PlanChunker:
+    """Slices a graph's census iteration space into bounded chunks.
+
+    ``max_items`` bounds the *pre-prune* items per chunk (so valid items
+    per chunk are ≤ max_items); ``pad_to`` rounds the fixed chunk shape up
+    to a shard-count multiple for the distributed engine.  ``orient`` /
+    ``prune_self`` match :func:`repro.core.planner.build_plan`.
+    """
+
+    def __init__(self, g: CompactDigraph, max_items: int,
+                 orient: str = "none", pad_to: int = 1,
+                 prune_self: bool = True):
+        if max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {max_items}")
+        if pad_to < 1:
+            raise ValueError(f"pad_to must be >= 1, got {pad_to}")
+        self.space: PairSpace = pair_space(g, orient=orient,
+                                           prune_self=prune_self)
+        self.max_items = int(max_items)
+        self.pad_to = int(pad_to)
+        w_pre = self.space.num_items_preprune
+        self.num_chunks = -(-w_pre // self.max_items) if w_pre else 0
+        #: fixed padded per-chunk item-array length (compile-once shape);
+        #: clamped to the actual work when the budget exceeds it
+        span = min(self.max_items, max(w_pre, 1))
+        self.chunk_shape = -(-span // self.pad_to) * self.pad_to
+        starts = np.arange(self.num_chunks, dtype=np.int64) * self.max_items
+        self._starts = starts
+        self._base_asym, self._base_mut = self.space.base_slices(starts)
+
+    def __len__(self) -> int:
+        return self.num_chunks
+
+    @property
+    def num_items_preprune(self) -> int:
+        return self.space.num_items_preprune
+
+    def device_arrays(self) -> tuple[np.ndarray, ...]:
+        """The 5 chunk-invariant device arrays (graph + pairs), int32 —
+        uploaded once by the engine and reused across every chunk."""
+        s = self.space
+        return (s.indptr.astype(np.int32), s.packed,
+                s.pair_u.astype(np.int32), s.pair_v.astype(np.int32),
+                s.pair_code)
+
+    def chunk(self, k: int) -> PlanChunk:
+        """Materialize chunk ``k`` (O(max_items) memory)."""
+        if not 0 <= k < self.num_chunks:
+            raise IndexError(f"chunk {k} out of range "
+                             f"[0, {self.num_chunks})")
+        lo = int(self._starts[k])
+        hi = min(lo + self.max_items, self.space.num_items_preprune)
+        item_pair, item_slot, item_side = emit_items(self.space, lo, hi)
+        num_items = int(item_pair.shape[0])
+        item_sp, item_pv = pad_and_pack(item_pair, item_slot, item_side,
+                                        self.chunk_shape)
+        return PlanChunk(
+            index=k, num_chunks=self.num_chunks, start=lo, stop=hi,
+            num_items=num_items, item_sp=item_sp, item_pv=item_pv,
+            base_asym=int(self._base_asym[k]),
+            base_mut=int(self._base_mut[k]))
+
+    def __iter__(self) -> Iterator[PlanChunk]:
+        for k in range(self.num_chunks):
+            yield self.chunk(k)
+
+
+def iter_plan_chunks(g: CompactDigraph, max_items: int,
+                     orient: str = "none", pad_to: int = 1,
+                     prune_self: bool = True) -> Iterator[PlanChunk]:
+    """Generator convenience over :class:`PlanChunker`."""
+    yield from PlanChunker(g, max_items, orient=orient, pad_to=pad_to,
+                           prune_self=prune_self)

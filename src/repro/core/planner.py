@@ -7,6 +7,19 @@ the perfect static load balance the paper obtained from OpenMP ``dynamic``
 scheduling / the XMT's thread virtualization — except here the balance is
 exact by construction and measurable ahead of time.
 
+The planner is factored in two stages so the flat plan never *has* to be
+materialized at once:
+
+* :func:`pair_space` builds the O(pairs) canonical-pair decomposition —
+  per-pair item counts, prefix offsets into the conceptual pre-prune item
+  space, and the per-pair closed-form dyadic terms.
+* :func:`emit_items` materializes any contiguous slice ``[lo, hi)`` of
+  that item space (with pruning/orientation applied) in O(hi - lo) memory.
+
+:func:`build_plan` is the one-slice special case (``[0, W)``);
+:mod:`repro.core.plan_stream` iterates bounded slices for out-of-core
+streaming execution.
+
 Two beyond-paper refinements live here:
 
 * **Packed item encoding** — each work item is two int32 words instead of
@@ -45,7 +58,7 @@ def pack_items(item_slot: np.ndarray, item_side: np.ndarray,
     """Fold (slot, side) and (pair, valid) into two int32 words per item.
 
     Requires ``slot < 2**30`` and ``pair < 2**30`` (enforced by
-    :func:`build_plan`'s int32 guard).
+    :func:`pair_space`'s int32 guard).
     """
     item_sp = ((item_slot.astype(np.int64) << 1)
                | item_side.astype(np.int64)).astype(np.int32)
@@ -60,6 +73,177 @@ def unpack_items(item_sp: np.ndarray, item_pv: np.ndarray):
     item_pv = np.asarray(item_pv)
     return (item_sp >> 1, (item_sp & 1).astype(np.int32),
             item_pv >> 1, (item_pv & 1).astype(bool))
+
+
+@dataclass(frozen=True)
+class PairSpace:
+    """Canonical-pair decomposition of the census iteration space.
+
+    Everything needed to (a) emit any contiguous slice of the *pre-prune*
+    flat item space on demand and (b) split the closed-form dyadic bases
+    additively across such slices — in O(n + edges + pairs) host memory,
+    independent of the total work-item count W.
+    """
+
+    n: int
+    orient: str                #: "none" or "degree"
+    prune_self: bool
+    max_degree: int
+    search_iters: int
+
+    indptr: np.ndarray         #: (n+1,) int64 CSR row offsets
+    packed: np.ndarray         #: (2*pairs,) int32 ``(nbr << 2) | code``
+    nbr: np.ndarray            #: (2*pairs,) ``packed >> 2`` (precomputed)
+    deg: np.ndarray            #: (n,) row degrees
+
+    pair_u: np.ndarray         #: (P,) int64
+    pair_v: np.ndarray         #: (P,) int64
+    pair_code: np.ndarray      #: (P,) int32, incl. inter-side bit if oriented
+
+    counts: np.ndarray         #: (P,) pre-prune items per pair (deg_u+deg_v)
+    offsets: np.ndarray        #: (P+1,) int64 prefix sum of ``counts``
+    pair_term: np.ndarray      #: (P,) int64 closed-form term n-deg_u-deg_v
+    pair_mut: np.ndarray       #: (P,) bool — pair dyad is mutual
+
+    @property
+    def num_pairs(self) -> int:
+        return self.pair_u.shape[0]
+
+    @property
+    def num_items_preprune(self) -> int:
+        """Size W₀ of the pre-prune flat item space (Σ deg_u + deg_v)."""
+        return int(self.offsets[-1])
+
+    def base_slices(self, starts: np.ndarray) -> tuple[np.ndarray,
+                                                       np.ndarray]:
+        """Additive (base_asym, base_mut) shares for the slices delimited by
+        pre-prune item positions ``starts`` (ascending, covering [0, W₀)).
+
+        Each pair's term is credited to the slice containing the pair's
+        first pre-prune item, so the shares sum exactly to the global bases
+        regardless of where slice boundaries fall (including mid-pair).
+        """
+        starts = np.asarray(starts, dtype=np.int64)
+        nchunks = starts.shape[0]
+        which = np.searchsorted(starts, self.offsets[:-1], side="right") - 1
+        which = np.clip(which, 0, max(nchunks - 1, 0))
+        asym = np.zeros(nchunks, dtype=np.int64)
+        mut = np.zeros(nchunks, dtype=np.int64)
+        np.add.at(asym, which[~self.pair_mut], self.pair_term[~self.pair_mut])
+        np.add.at(mut, which[self.pair_mut], self.pair_term[self.pair_mut])
+        return asym, mut
+
+
+def pair_space(g: CompactDigraph, orient: str = "none",
+               prune_self: bool = True) -> PairSpace:
+    """Build the O(pairs) pair decomposition for ``g`` (no items yet)."""
+    if orient not in ("none", "degree"):
+        raise ValueError(f"unknown orient mode {orient!r}")
+    n = g.n
+    indptr, packed = g.indptr, g.packed
+    nbr = packed >> 2
+    deg = g.degrees
+
+    # canonical pairs: CSR entries with nbr > row
+    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
+    canon = nbr > rows
+    pair_u = rows[canon]
+    pair_v = nbr[canon].astype(np.int64)
+    pair_code = (packed[canon] & 3).astype(np.int32)
+    num_pairs = pair_u.shape[0]
+
+    deg_u, deg_v = deg[pair_u], deg[pair_v]
+    if orient == "degree" and num_pairs:
+        inter_side = (deg_v < deg_u).astype(np.int32)
+        pair_code = pair_code | (inter_side << INTER_SIDE_BIT)
+
+    counts = (deg_u + deg_v).astype(np.int64)
+    offsets = np.zeros(num_pairs + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+
+    # slot/pair gain a packed flag bit, so they must fit in 30 value bits
+    if packed.shape[0] >= 2**30:
+        raise ValueError("graph exceeds int32 packed-item indexing "
+                         "(need slots < 2**30); shard the graph first")
+
+    max_deg = int(deg.max()) if n else 0
+    return PairSpace(
+        n=n, orient=orient, prune_self=prune_self, max_degree=max_deg,
+        search_iters=max(1, int(np.ceil(np.log2(max_deg + 1)))),
+        indptr=indptr, packed=packed, nbr=nbr, deg=deg,
+        pair_u=pair_u, pair_v=pair_v, pair_code=pair_code,
+        counts=counts, offsets=offsets,
+        pair_term=(n - deg_u - deg_v).astype(np.int64),
+        pair_mut=(pair_code & 3) == 3)
+
+
+def emit_items(space: PairSpace, lo: int, hi: int
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Materialize pre-prune item range ``[lo, hi)`` with pruning applied.
+
+    Returns ``(item_pair, item_slot, item_side)`` for the surviving items,
+    in pre-prune order, using O(hi - lo) memory.  Slices may start or end
+    mid-pair (intra-pair splits for hub pairs are exactly this).
+    """
+    offsets = space.offsets
+    lo, hi = int(lo), int(hi)
+    if not (0 <= lo <= hi <= space.num_items_preprune):
+        raise ValueError(f"slice [{lo}, {hi}) outside item space "
+                         f"[0, {space.num_items_preprune})")
+    empty = np.zeros(0, np.int64)
+    if hi == lo:
+        return empty, empty, empty.astype(np.int8)
+
+    p0 = int(np.searchsorted(offsets, lo, side="right") - 1)
+    p1 = int(np.searchsorted(offsets, hi, side="left"))
+    ids = np.arange(p0, p1, dtype=np.int64)
+    overlap = (np.minimum(offsets[ids + 1], hi)
+               - np.maximum(offsets[ids], lo))
+    item_pair = np.repeat(ids, overlap)
+    within = np.arange(lo, hi, dtype=np.int64) - offsets[item_pair]
+
+    deg_u = space.deg[space.pair_u[item_pair]]
+    item_side = (within >= deg_u).astype(np.int8)
+    item_slot = np.where(
+        item_side == 0,
+        space.indptr[space.pair_u[item_pair]] + within,
+        space.indptr[space.pair_v[item_pair]] + within - deg_u)
+
+    if space.orient == "degree":
+        inter_side = (space.pair_code[item_pair] >> INTER_SIDE_BIT) & 1
+        w_ids = space.nbr[item_slot]
+        u_of = space.pair_u[item_pair]
+        v_of = space.pair_v[item_pair]
+        on_inter = item_side == inter_side
+        not_self = (w_ids != u_of) & (w_ids != v_of)
+        # non-inter-side items survive only if the canonical predicate can
+        # hold: N(u)-side needs w > v; N(v)-side needs w > u (plan-time
+        # facts — see census.classify_items for the device-side predicate)
+        can_count = np.where(item_side == 0, w_ids > v_of, w_ids > u_of)
+        keep = not_self & (on_inter | can_count)
+        return item_pair[keep], item_slot[keep], item_side[keep]
+    if space.prune_self:
+        w_ids = space.nbr[item_slot]
+        keep = ~(((item_side == 0) & (w_ids == space.pair_v[item_pair])) |
+                 ((item_side == 1) & (w_ids == space.pair_u[item_pair])))
+        return item_pair[keep], item_slot[keep], item_side[keep]
+    return item_pair, item_slot, item_side
+
+
+def pad_and_pack(item_pair: np.ndarray, item_slot: np.ndarray,
+                 item_side: np.ndarray, length: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Pad emitted items with invalid (all-zero) entries to ``length`` and
+    fold them into the two packed int32 words — the one padding/packing
+    convention shared by the monolithic plan and every streamed chunk."""
+    num_items = item_pair.shape[0]
+    pad = length - num_items
+    item_pair = np.concatenate([item_pair, np.zeros(pad, np.int64)])
+    item_slot = np.concatenate([item_slot, np.zeros(pad, np.int64)])
+    item_side = np.concatenate([item_side, np.zeros(pad, np.int8)])
+    item_valid = np.concatenate(
+        [np.ones(num_items, bool), np.zeros(pad, bool)])
+    return pack_items(item_slot, item_side, item_pair, item_valid)
 
 
 @dataclass(frozen=True)
@@ -107,14 +291,43 @@ class CensusPlan:
     def item_valid(self) -> np.ndarray:
         return (self.item_pv & 1).astype(bool)
 
-    def balance_stats(self, num_shards: int) -> dict[str, float]:
+    def preprune_index(self) -> np.ndarray:
+        """Map each (padded) plan item to its pre-prune flat index.
+
+        This is the coordinate system :mod:`repro.core.plan_stream` chunks
+        over, recovered from the packed words alone; padding items map to
+        index 0 (they are invalid and never counted).
+        """
+        item_slot, item_side, item_pair, item_valid = unpack_items(
+            self.item_sp, self.item_pv)
+        deg = np.diff(self.indptr).astype(np.int64)
+        u = self.pair_u.astype(np.int64)[item_pair]
+        v = self.pair_v.astype(np.int64)[item_pair]
+        within = np.where(
+            item_side == 0,
+            item_slot - self.indptr[u],
+            deg[u] + item_slot - self.indptr[v])
+        counts = deg[self.pair_u.astype(np.int64)] + \
+            deg[self.pair_v.astype(np.int64)]
+        offsets = np.zeros(self.num_pairs + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return np.where(item_valid, offsets[item_pair] + within, 0)
+
+    def balance_stats(self, num_shards: int,
+                      max_items: int | None = None) -> dict[str, float]:
         """Work-imbalance metrics (paper Fig 9 utilization analogue).
 
         Compares the flat plan against pair-granular partitioning (what a
         naive parallel-for over pairs would give on a power-law graph).
+
+        With ``max_items`` set, additionally reports the *streamed*
+        schedule that :class:`repro.core.engine.CensusEngine` would run:
+        per-chunk valid-item counts and their max-over-mean imbalance
+        (chunks are equal slices of the pre-prune item space, so post-prune
+        counts per chunk wobble with the local prune rate).
         """
         wp = self.item_pv.shape[0]
-        flat_max = -(-wp // num_shards)
+        flat_max = -(-wp // num_shards) if wp else 0
         flat_mean = wp / num_shards
         # pair-granular: contiguous pair blocks, shard work = sum of costs
         # (single O(W) decode instead of one per property access)
@@ -125,18 +338,52 @@ class CensusPlan:
         bounds = np.linspace(0, self.num_pairs, num_shards + 1).astype(int)
         per = np.add.reduceat(cost, bounds[:-1]) if self.num_pairs else \
             np.zeros(num_shards)
-        return {
-            "flat_max_over_mean": flat_max / max(flat_mean, 1e-9),
+        stats = {
+            "flat_max_over_mean":
+                flat_max / max(flat_mean, 1e-9) if wp else 1.0,
             "pair_max_over_mean": float(per.max() / max(per.mean(), 1e-9))
             if self.num_pairs else 1.0,
             "items": int(self.num_items),
             "pairs": int(self.num_pairs),
+        }
+        if max_items is not None:
+            stats.update(self.chunk_stats(max_items))
+        return stats
+
+    def chunk_stats(self, max_items: int) -> dict:
+        """Streamed-schedule stats for a ``max_items`` chunk budget:
+        number of chunks, per-chunk valid item counts, and the
+        max-over-mean chunk imbalance (1.0 == perfectly even chunks)."""
+        if max_items < 1:
+            raise ValueError("max_items must be >= 1")
+        pre = self.preprune_index()
+        valid = self.item_valid
+        deg = np.diff(self.indptr).astype(np.int64)
+        w_pre = int((deg[self.pair_u.astype(np.int64)]
+                     + deg[self.pair_v.astype(np.int64)]).sum())
+        num_chunks = max(-(-w_pre // max_items), 1) if w_pre else 0
+        chunk_items = np.bincount(pre[valid] // max_items,
+                                  minlength=max(num_chunks, 1))[
+            :max(num_chunks, 1)] if num_chunks else np.zeros(0, np.int64)
+        mean = chunk_items.mean() if num_chunks else 0.0
+        return {
+            "chunks": int(num_chunks),
+            "chunk_items": chunk_items.astype(int).tolist(),
+            "chunk_max_over_mean":
+                float(chunk_items.max() / max(mean, 1e-9))
+                if num_chunks else 1.0,
         }
 
 
 def build_plan(g: CompactDigraph, pad_to: int = 1,
                prune_self: bool = True, orient: str = "none") -> CensusPlan:
     """Construct the flat census plan for a compact graph.
+
+    This is the one-chunk special case of the streaming planner: the whole
+    pre-prune item space is emitted as a single :func:`emit_items` slice,
+    so host memory is O(W).  For graphs whose W outgrows host RAM use
+    :class:`repro.core.engine.CensusEngine` with a ``max_items`` budget,
+    which never materializes more than one chunk.
 
     ``prune_self`` drops the two guaranteed no-op items per pair (the
     slot where N(u) contains v itself and vice versa) at plan time — a
@@ -148,88 +395,40 @@ def build_plan(g: CompactDigraph, pad_to: int = 1,
     predicate (see module docstring).  Implies ``prune_self`` semantics.
     The resulting plan is accepted by every backend and yields bit-identical
     censuses.
+
+    A plan with zero work items (possible with pairs present — e.g. a
+    single mutual dyad, whose only items are self-items) has zero-length
+    item arrays; both census drivers resolve such plans entirely from the
+    closed-form bases without a device dispatch.
     """
-    if orient not in ("none", "degree"):
-        raise ValueError(f"unknown orient mode {orient!r}")
-    n = g.n
-    indptr, packed = g.indptr, g.packed
-    nbr = packed >> 2
-    deg = g.degrees
+    space = pair_space(g, orient=orient, prune_self=prune_self)
+    item_pair, item_slot, item_side = emit_items(
+        space, 0, space.num_items_preprune)
+    num_items = int(item_pair.shape[0])
 
-    # canonical pairs: CSR entries with nbr > row
-    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
-    canon = nbr > rows
-    pair_u = rows[canon]
-    pair_v = nbr[canon].astype(np.int64)
-    pair_code = (packed[canon] & 3).astype(np.int32)
-    num_pairs = pair_u.shape[0]
-
-    deg_u, deg_v = deg[pair_u], deg[pair_v]
-    counts = deg_u + deg_v
-    num_items = int(counts.sum())
-
-    offsets = np.zeros(num_pairs + 1, dtype=np.int64)
-    np.cumsum(counts, out=offsets[1:])
-    item_pair = np.repeat(np.arange(num_pairs, dtype=np.int64), counts)
-    within = np.arange(num_items, dtype=np.int64) - offsets[item_pair]
-    item_side = (within >= deg_u[item_pair]).astype(np.int8)
-    item_slot = np.where(
-        item_side == 0,
-        indptr[pair_u[item_pair]] + within,
-        indptr[pair_v[item_pair]] + within - deg_u[item_pair])
-
-    if orient == "degree" and num_items:
-        inter_side = (deg_v < deg_u).astype(np.int32)
-        pair_code = pair_code | (inter_side << INTER_SIDE_BIT)
-        w_ids = nbr[item_slot]
-        u_of, v_of = pair_u[item_pair], pair_v[item_pair]
-        on_inter = item_side == inter_side[item_pair]
-        not_self = (w_ids != u_of) & (w_ids != v_of)
-        # non-inter-side items survive only if the canonical predicate can
-        # hold: N(u)-side needs w > v; N(v)-side needs w > u (plan-time
-        # facts — see census.classify_items for the device-side predicate)
-        can_count = np.where(item_side == 0, w_ids > v_of, w_ids > u_of)
-        keep = not_self & (on_inter | can_count)
-        item_pair, item_slot, item_side = (
-            item_pair[keep], item_slot[keep], item_side[keep])
-        num_items = int(item_pair.shape[0])
-    elif prune_self and num_items:
-        w_ids = nbr[item_slot]
-        keep = ~(((item_side == 0) & (w_ids == pair_v[item_pair])) |
-                 ((item_side == 1) & (w_ids == pair_u[item_pair])))
-        item_pair = item_pair[keep]
-        item_slot = item_slot[keep]
-        item_side = item_side[keep]
-        num_items = int(item_pair.shape[0])
-
-    # pad the flat plan to a multiple of the shard count
-    wp = -(-max(num_items, 1) // pad_to) * pad_to
-    pad = wp - num_items
-    item_pair = np.concatenate([item_pair, np.zeros(pad, np.int64)])
-    item_slot = np.concatenate([item_slot, np.zeros(pad, np.int64)])
-    item_side = np.concatenate([item_side, np.zeros(pad, np.int8)])
-    item_valid = np.concatenate(
-        [np.ones(num_items, bool), np.zeros(pad, bool)])
-
-    # closed-form dyadic bases: sum over pairs of (n - deg_u - deg_v)
-    term = (n - deg_u - deg_v).astype(np.int64)
-    mut = (pair_code & 3) == 3
-    base_mut = int(term[mut].sum())
-    base_asym = int(term[~mut].sum())
-
-    max_deg = int(deg.max()) if n else 0
-    # slot/pair gain a packed flag bit, so they must fit in 30 value bits
-    if wp >= 2**31 or packed.shape[0] >= 2**30:
-        raise ValueError("plan exceeds int32 packed-item indexing "
-                         "(need slots < 2**30); shard the graph first")
-    item_sp, item_pv = pack_items(item_slot, item_side, item_pair,
-                                  item_valid)
+    # pad the flat plan to a multiple of the shard count (a zero-item plan
+    # stays zero-length — no phantom padded items)
+    wp = -(-num_items // pad_to) * pad_to
+    if wp >= 2**31:
+        raise ValueError("plan exceeds int32 packed-item indexing; "
+                         "stream it in chunks (CensusEngine max_items) "
+                         "or shard the graph first")
+    item_sp, item_pv = pad_and_pack(item_pair, item_slot, item_side, wp)
+    base_asym, base_mut = global_bases(space)
     return CensusPlan(
-        n=n, num_pairs=num_pairs, num_items=num_items, max_degree=max_deg,
-        search_iters=max(1, int(np.ceil(np.log2(max_deg + 1)))),
+        n=space.n, num_pairs=space.num_pairs, num_items=num_items,
+        max_degree=space.max_degree, search_iters=space.search_iters,
         orient=orient,
-        indptr=indptr.astype(np.int32), packed=packed,
-        pair_u=pair_u.astype(np.int32), pair_v=pair_v.astype(np.int32),
-        pair_code=pair_code,
+        indptr=space.indptr.astype(np.int32), packed=space.packed,
+        pair_u=space.pair_u.astype(np.int32),
+        pair_v=space.pair_v.astype(np.int32),
+        pair_code=space.pair_code,
         item_sp=item_sp, item_pv=item_pv,
         base_asym=base_asym, base_mut=base_mut)
+
+
+def global_bases(space: PairSpace) -> tuple[int, int]:
+    """Exact closed-form dyadic bases summed over all pairs."""
+    base_mut = int(space.pair_term[space.pair_mut].sum())
+    base_asym = int(space.pair_term[~space.pair_mut].sum())
+    return base_asym, base_mut

@@ -1,0 +1,355 @@
+"""Streaming census engine: chunk-boundary correctness, zero-item plans,
+compile-once chunk steps, chunker invariants, vectorized digraph helpers.
+
+The central property: for ANY ``max_items`` — including budgets smaller
+than a single hub pair's item count, which force intra-pair chunk splits —
+the streamed census is bit-identical to the monolithic oracle, for every
+backend, both orient modes, and both drivers (single-device and mesh)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CensusEngine, PlanChunker, build_plan, census_batagelj_mrvar,
+    default_mesh, from_edges, iter_plan_chunks, scale_free_digraph,
+    to_dense, triad_census, triad_census_distributed, triad_census_graph,
+    unpack_items)
+from repro.core.digraph import CompactDigraph
+from repro.core.planner import emit_items, global_bases, pair_space
+
+
+def hub_graph(n=24, hub_out=16, extra=40, seed=0):
+    """Graph with a guaranteed hub: pair (hub, v) costs > hub_out items,
+    so any max_items < hub_out forces intra-pair chunk splits."""
+    rng = np.random.default_rng(seed)
+    src = [0] * hub_out + list(rng.integers(0, n, extra))
+    dst = list(range(1, hub_out + 1)) + list(rng.integers(0, n, extra))
+    return from_edges(src, dst, n=max(n, hub_out + 1))
+
+
+# ------------------------------------------------------------- chunker
+
+
+class TestPlanChunker:
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    @pytest.mark.parametrize("max_items", [1, 3, 17, 101, 10**6])
+    def test_chunks_partition_the_monolithic_plan(self, orient, max_items):
+        g = hub_graph()
+        plan = build_plan(g, orient=orient)
+        chunks = list(iter_plan_chunks(g, max_items, orient=orient))
+        # concatenated valid chunk items == the monolithic plan's items
+        sp = np.concatenate([c.item_sp[:0] if c.num_items == 0 else
+                             c.item_sp[np.asarray(
+                                 (c.item_pv & 1) == 1)] for c in chunks])
+        pv = np.concatenate([c.item_pv[np.asarray(
+            (c.item_pv & 1) == 1)] for c in chunks])
+        valid = plan.item_valid
+        np.testing.assert_array_equal(sp, plan.item_sp[valid])
+        np.testing.assert_array_equal(pv, plan.item_pv[valid])
+        assert sum(c.num_items for c in chunks) == plan.num_items
+
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    def test_bases_are_additive(self, orient):
+        g = hub_graph(seed=3)
+        plan = build_plan(g, orient=orient)
+        for max_items in (1, 7, 50):
+            chunks = list(iter_plan_chunks(g, max_items, orient=orient))
+            assert sum(c.base_asym for c in chunks) == plan.base_asym
+            assert sum(c.base_mut for c in chunks) == plan.base_mut
+
+    def test_budget_and_fixed_shape(self):
+        g = hub_graph(seed=1)
+        ck = PlanChunker(g, max_items=8, pad_to=8)
+        assert ck.chunk_shape % 8 == 0
+        for c in ck:
+            assert c.num_items <= 8
+            assert c.item_sp.shape == (ck.chunk_shape,)
+            assert c.item_pv.shape == (ck.chunk_shape,)
+            # padding is all-invalid
+            _, _, _, valid = unpack_items(c.item_sp, c.item_pv)
+            assert valid[:c.num_items].all()
+            assert not valid[c.num_items:].any()
+
+    def test_intra_pair_split_occurs(self):
+        """With max_items below the hub pair's cost, some pair must span
+        two consecutive chunks — the boundary case this PR exists for."""
+        g = hub_graph()
+        chunks = list(iter_plan_chunks(g, max_items=4))
+        last_pair_per_chunk = []
+        first_pair_per_chunk = []
+        for c in chunks:
+            _, _, pair, valid = unpack_items(c.item_sp, c.item_pv)
+            if valid.any():
+                first_pair_per_chunk.append(pair[valid][0])
+                last_pair_per_chunk.append(pair[valid][-1])
+        crossing = any(a == b for a, b in zip(last_pair_per_chunk,
+                                              first_pair_per_chunk[1:]))
+        assert crossing, "no pair spanned a chunk boundary"
+
+    def test_rejects_bad_budget(self):
+        g = hub_graph()
+        with pytest.raises(ValueError):
+            PlanChunker(g, max_items=0)
+        with pytest.raises(ValueError):
+            PlanChunker(g, max_items=8, pad_to=0)
+
+    def test_empty_graph_has_no_chunks(self):
+        ck = PlanChunker(from_edges([], [], n=6), max_items=8)
+        assert len(ck) == 0 and list(ck) == []
+
+    def test_emit_items_rejects_bad_slice(self):
+        sp = pair_space(hub_graph())
+        with pytest.raises(ValueError):
+            emit_items(sp, -1, 5)
+        with pytest.raises(ValueError):
+            emit_items(sp, 0, sp.num_items_preprune + 1)
+
+
+# ------------------------------------------------------------- parity
+
+#: fast sweep on the pure-XLA backend; the Pallas backends run per-chunk
+#: interpret-mode kernels on CPU, so they sweep a reduced budget set that
+#: still includes an intra-pair-splitting budget (hub pair cost > 8)
+SWEEP = {"jnp": (1, 3, 17, 101), "pallas": (8, 64),
+         "pallas-fused": (8, 64)}
+
+
+class TestStreamedEqualsMonolithic:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas-fused"])
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    def test_single_device(self, backend, orient):
+        g = hub_graph(seed=5)
+        want = triad_census(build_plan(g, orient=orient), backend=backend)
+        np.testing.assert_array_equal(
+            want, census_batagelj_mrvar(g))   # monolithic oracle anchor
+        engine = CensusEngine(backend=backend)
+        for max_items in SWEEP[backend]:
+            got = engine.run(g, max_items=max_items, orient=orient)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"max_items={max_items}")
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas-fused"])
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    def test_mesh_driver(self, backend, orient):
+        g = hub_graph(seed=6)
+        mesh = default_mesh()
+        want = census_batagelj_mrvar(g)
+        max_items = 13 if backend == "jnp" else 64
+        got = triad_census_graph(g, mesh=mesh, backend=backend,
+                                 orient=orient, max_items=max_items)
+        np.testing.assert_array_equal(got, want)
+
+    def test_scale_free_sweep(self):
+        g = scale_free_digraph(n=250, avg_degree=9, exponent=2.0,
+                               mutual_p=0.35, seed=11)
+        want = census_batagelj_mrvar(g)
+        engine = CensusEngine(backend="jnp")
+        for max_items in (29, 500, 4096):
+            for orient in ("none", "degree"):
+                got = engine.run(g, max_items=max_items, orient=orient)
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"{max_items}/{orient}")
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_graphs_random_budgets(self, seed):
+        rng = np.random.default_rng(300 + seed)
+        n = int(rng.integers(3, 40))
+        a = rng.random((n, n)) < float(rng.uniform(0.05, 0.4))
+        np.fill_diagonal(a, False)
+        g = from_edges(*np.nonzero(a), n=n)
+        want = census_batagelj_mrvar(g)
+        engine = CensusEngine(backend="jnp")
+        for max_items in (1, int(rng.integers(2, 50)), 10**6):
+            got = engine.run(g, max_items=max_items)
+            np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- zero work
+
+
+class TestZeroItemPlans:
+    """A mutual dyad's only work items are self-items: pairs exist but the
+    pruned plan is empty.  Regression for the phantom padded chunk."""
+
+    @pytest.mark.parametrize("pad_to", [1, 8])
+    def test_plan_is_zero_length(self, pad_to):
+        g = from_edges([0, 1], [1, 0], n=4)
+        plan = build_plan(g, pad_to=pad_to)
+        assert plan.num_pairs == 1 and plan.num_items == 0
+        assert plan.item_sp.shape == (0,) and plan.item_pv.shape == (0,)
+
+    def test_single_device_driver(self):
+        g = from_edges([0, 1], [1, 0], n=4)
+        c = triad_census(build_plan(g))
+        np.testing.assert_array_equal(c, census_batagelj_mrvar(g))
+        assert c[2] == 2          # two 102 triads from the closed form
+
+    def test_distributed_driver(self):
+        g = from_edges([0, 1], [1, 0], n=4)
+        mesh = default_mesh()
+        plan = build_plan(g, pad_to=int(np.prod(mesh.devices.shape)))
+        c = triad_census_distributed(plan, mesh=mesh)
+        np.testing.assert_array_equal(c, census_batagelj_mrvar(g))
+
+    def test_streamed(self):
+        g = from_edges([0, 1], [1, 0], n=4)
+        engine = CensusEngine(backend="jnp")
+        c = engine.run(g, max_items=4)
+        np.testing.assert_array_equal(c, census_batagelj_mrvar(g))
+
+    def test_empty_graph_all_paths(self):
+        g = from_edges([], [], n=10)
+        want = census_batagelj_mrvar(g)
+        np.testing.assert_array_equal(triad_census(build_plan(g)), want)
+        np.testing.assert_array_equal(
+            triad_census_graph(g, max_items=8), want)
+
+
+# ------------------------------------------------------------- engine
+
+
+class TestEngineMechanics:
+    def test_step_compiles_once_across_chunks(self):
+        g = scale_free_digraph(n=200, avg_degree=8, exponent=2.1,
+                               mutual_p=0.3, seed=4)
+        engine = CensusEngine(backend="jnp")
+        engine.run(g, max_items=97)
+        st = engine.stats
+        assert st.chunks > 4
+        # fixed chunk shape → at most one fresh compilation for the whole
+        # stream (0 if an earlier test already compiled this shape)
+        assert st.step_compiles <= 1, st.step_compiles
+        assert st.streamed and st.chunk_shape >= 97 >= max(st.chunk_items)
+
+    def test_stats_match_plan(self):
+        g = scale_free_digraph(n=150, avg_degree=6, exponent=2.2,
+                               mutual_p=0.3, seed=9)
+        plan = build_plan(g)
+        engine = CensusEngine(backend="jnp")
+        engine.run(g, max_items=64)
+        st = engine.stats
+        assert st.items == plan.num_items
+        assert sum(st.chunk_items) == plan.num_items
+        assert st.peak_plan_bytes == 8 * st.chunk_shape
+        assert st.monolithic_plan_bytes >= 8 * plan.num_items
+        assert st.chunk_max_over_mean >= 1.0
+        assert "streamed" in st.summary()
+
+    def test_balance_stats_reports_streamed_schedule(self):
+        g = scale_free_digraph(n=150, avg_degree=6, exponent=2.2,
+                               mutual_p=0.3, seed=9)
+        plan = build_plan(g)
+        engine = CensusEngine(backend="jnp")
+        engine.run(g, max_items=64)
+        st = plan.balance_stats(8, max_items=64)
+        # the planner's predicted chunk schedule is the engine's actual one
+        assert st["chunks"] == engine.stats.chunks
+        assert st["chunk_items"] == engine.stats.chunk_items
+        assert st["chunk_max_over_mean"] == pytest.approx(
+            engine.stats.chunk_max_over_mean)
+
+    def test_progress_hook(self):
+        g = hub_graph(seed=2)
+        seen = []
+        engine = CensusEngine(backend="jnp")
+        engine.run(g, max_items=50,
+                   progress=lambda k, total, items: seen.append(
+                       (k, total, items)))
+        assert len(seen) == engine.stats.chunks
+        assert [k for k, _, _ in seen] == list(range(len(seen)))
+        assert all(t == len(seen) for _, t, _ in seen)
+        assert [i for _, _, i in seen] == engine.stats.chunk_items
+
+    def test_report_streaming_section(self):
+        from repro.analysis.report import streaming_section
+        g = scale_free_digraph(n=120, avg_degree=6, exponent=2.2,
+                               mutual_p=0.3, seed=12)
+        engine = CensusEngine(backend="jnp")
+        engine.run(g, max_items=200)
+        md = streaming_section(engine.stats)
+        assert "§Streaming schedule" in md
+        assert f"{engine.stats.chunks} chunks" in md
+        for items in engine.stats.chunk_items[:3]:
+            assert f"| {items} |" in md
+        assert "max-over-mean" in md
+        # long schedules elide the middle instead of exploding the table
+        engine.run(g, max_items=20)
+        md = streaming_section(engine.stats)
+        assert engine.stats.chunks > 16 and "| … | … | … |" in md
+
+    def test_monolithic_run_records_stats(self):
+        g = hub_graph(seed=7)
+        engine = CensusEngine(backend="jnp")
+        want = census_batagelj_mrvar(g)
+        np.testing.assert_array_equal(engine.run(g), want)
+        st = engine.stats
+        assert not st.streamed and st.chunks == 1
+        assert st.items == build_plan(g).num_items
+
+    def test_rejects_unknown_backend(self):
+        with pytest.raises(ValueError):
+            CensusEngine(backend="cuda")
+
+    def test_rejects_unpadded_plan_on_mesh(self):
+        import jax
+        if len(jax.devices()) <= 1:
+            pytest.skip("single device")
+        g = hub_graph(seed=8)
+        plan = build_plan(g, pad_to=1)
+        if plan.item_sp.shape[0] % len(jax.devices()) == 0:
+            pytest.skip("accidentally aligned")
+        with pytest.raises(ValueError):
+            CensusEngine(mesh=default_mesh()).run_plan(plan)
+
+
+# ------------------------------------------------------- vectorized digraph
+
+
+def _to_dense_loop(g: CompactDigraph) -> np.ndarray:
+    """The original O(n)-Python-loop implementation, kept as the oracle."""
+    a = np.zeros((g.n, g.n), dtype=bool)
+    for u in range(g.n):
+        nb, cd = g.neighbors(u), g.codes(u)
+        a[u, nb[(cd & 1) != 0]] = True
+        a[nb[(cd & 2) != 0], u] = True
+    return a
+
+
+class TestVectorizedDigraph:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_to_dense_matches_loop_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 60))
+        a = rng.random((n, n)) < float(rng.uniform(0.0, 0.5))
+        np.fill_diagonal(a, False)
+        g = from_edges(*np.nonzero(a), n=n)
+        np.testing.assert_array_equal(to_dense(g), _to_dense_loop(g))
+        np.testing.assert_array_equal(to_dense(g), a)
+
+    def test_validate_accepts_valid_graphs(self):
+        for g in (from_edges([], [], n=5),          # empty
+                  from_edges([0], [4], n=9),        # isolated vertices
+                  hub_graph(),                       # hub + empty rows
+                  scale_free_digraph(n=300, avg_degree=7, exponent=2.1,
+                                     mutual_p=0.3, seed=1)):
+            g.validate()
+
+    def test_validate_catches_unsorted_row(self):
+        g = from_edges([0, 0, 1], [1, 2, 2], n=3)
+        bad = CompactDigraph(n=g.n, indptr=g.indptr,
+                             packed=g.packed[::-1].copy(),
+                             num_arcs=g.num_arcs)
+        with pytest.raises(AssertionError, match="not strictly sorted"):
+            bad.validate()
+
+    def test_validate_catches_zero_dir_code(self):
+        g = from_edges([0, 1], [1, 2], n=3)
+        packed = g.packed.copy()
+        packed[0] &= ~np.int32(3)
+        bad = CompactDigraph(n=g.n, indptr=g.indptr, packed=packed,
+                             num_arcs=g.num_arcs)
+        with pytest.raises(AssertionError, match="zero dir code"):
+            bad.validate()
+
+    def test_to_dense_empty(self):
+        assert to_dense(from_edges([], [], n=4)).sum() == 0
