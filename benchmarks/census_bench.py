@@ -266,6 +266,120 @@ def streaming_smoke(rows: list):
                      f"step_compiles={compiles_first};parity=ok"))
 
 
+def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
+                    backbone_every=2):
+    """Monitoring workload: a persistent service backbone (a fixed server
+    mesh cycled through the stream, so it sits in every window and never
+    churns) interleaved with ephemeral peer-to-peer flows that churn
+    completely between windows — the regime where incremental window
+    updates pay (arc deltas touch few rows)."""
+    n = n_servers + n_peers
+    bs = rng.integers(0, n_servers, backbone_arcs)
+    bd = (bs + 1 + rng.integers(0, n_servers - 1, backbone_arcs)) \
+        % n_servers
+    src = np.empty(length, np.int64)
+    dst = np.empty(length, np.int64)
+    slots = np.arange(length)
+    bb = slots % backbone_every == 0
+    idx = (slots[bb] // backbone_every) % backbone_arcs
+    src[bb], dst[bb] = bs[idx], bd[idx]
+    n_peer_slots = int((~bb).sum())
+    src[~bb] = n_servers + rng.integers(0, n_peers, n_peer_slots)
+    dst[~bb] = n_servers + rng.integers(0, n_peers, n_peer_slots)
+    return src, dst, n
+
+
+def _run_monitor(src, dst, n, window, stride, incremental,
+                 backend="jnp", max_items=4096):
+    from repro.core import TriadMonitor
+    mon = TriadMonitor(n, window=window, stride=stride, history=5,
+                       backend=backend, incremental=incremental,
+                       max_items=max_items)
+    t0 = time.perf_counter()
+    mon.observe(src, dst)
+    dt = time.perf_counter() - t0
+    return mon, dt
+
+
+def temporal_windows(rows: list):
+    """Tentpole rows: full per-window recompute vs incremental delta
+    updates of sliding windows, at 5% / 20% / 50% stride-to-window
+    overlap ratios.  Asserts bit-identical censuses in-row and reports
+    the items processed plus the affected-pair fraction per window."""
+    rng = np.random.default_rng(0)
+    window = 4000
+    src, dst, n = _monitor_stream(rng, 80, 3000, 800, 11 * window)
+    # warm the shared jitted chunk step (same static args / chunk shape
+    # for every monitor below) so neither timed mode absorbs the compile
+    warm = 2 * window
+    _run_monitor(src[:warm], dst[:warm], n, window, window // 2,
+                 incremental=True)
+    for frac in (0.05, 0.20, 0.50):
+        stride = max(1, int(window * frac))
+        mon_full, dt_full = _run_monitor(src, dst, n, window, stride,
+                                         incremental=False)
+        mon_inc, dt_inc = _run_monitor(src, dst, n, window, stride,
+                                       incremental=True)
+        if not (mon_full.censuses == mon_inc.censuses).all():
+            raise AssertionError(
+                f"incremental != full at stride {frac:.0%}")
+        slid = mon_inc.window_stats[1:]     # first window is always full
+        items = sum(s.items for s in slid)
+        full_items = sum(s.full_items for s in slid)
+        aff = np.mean([s.affected_pairs for s in slid])
+        tag = f"s{int(frac * 100):02d}"
+        rows.append((f"temporal_full_{tag}", dt_full * 1e6,
+                     f"windows={len(mon_full.window_stats)};"
+                     f"items={sum(s.items for s in mon_full.window_stats)}"))
+        rows.append((f"temporal_incr_{tag}", dt_inc * 1e6,
+                     f"windows={len(mon_inc.window_stats)};items={items};"
+                     f"item_reduction={full_items / max(items, 1):.2f}x;"
+                     f"mean_affected_pairs={aff:.0f};"
+                     f"speedup={dt_full / max(dt_inc, 1e-9):.2f}x"))
+
+
+def temporal_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --temporal-smoke): sliding windows at
+    a 10% stride, asserting (a) incremental censuses are bit-identical to
+    full per-window recomputes and (b) the incremental path processes
+    >= 2x fewer census items, on the jnp and pallas-fused backends."""
+    rng = np.random.default_rng(0)
+    window = 1500
+    src, dst, n = _monitor_stream(rng, 40, 1500, 300, 5 * window)
+    stride = window // 10
+    for backend in ("jnp", "pallas-fused"):
+        # warm the chunk step so the timed runs compare algorithms, not
+        # jit-cache states
+        _run_monitor(src[:2 * window], dst[:2 * window], n, window,
+                     stride, incremental=True, backend=backend,
+                     max_items=2048)
+        mon_full, dt_full = _run_monitor(
+            src, dst, n, window, stride, incremental=False,
+            backend=backend, max_items=2048)
+        mon_inc, dt_inc = _run_monitor(
+            src, dst, n, window, stride, incremental=True,
+            backend=backend, max_items=2048)
+        if not (mon_full.censuses == mon_inc.censuses).all():
+            raise AssertionError(f"incremental != full on {backend}")
+        slid_inc = mon_inc.window_stats[1:]
+        items = sum(s.items for s in slid_inc)
+        full_items = sum(s.full_items for s in slid_inc)
+        if full_items < 2 * items:
+            raise AssertionError(
+                f"{backend}: incremental processed {items} items vs "
+                f"{full_items} full — less than the required 2x reduction")
+        compiles = sum(s.step_compiles for s in mon_inc.window_stats)
+        if compiles > 1:
+            raise AssertionError(
+                f"{backend}: session step recompiled ({compiles}) "
+                f"across {len(mon_inc.window_stats)} windows")
+        rows.append((f"temporal_smoke_{backend}", dt_inc * 1e6,
+                     f"windows={len(mon_inc.window_stats)};"
+                     f"items={items};full_items={full_items};"
+                     f"item_reduction={full_items / max(items, 1):.2f}x;"
+                     f"step_compiles={compiles};parity=ok"))
+
+
 def run(rows: list):
     fig6_degree_distributions(rows)
     fig9_balance(rows)
@@ -277,6 +391,7 @@ def run(rows: list):
     kernel_throughput(rows)
     fused_vs_reference(rows)
     streaming_vs_monolithic(rows)
+    temporal_windows(rows)
 
 
 def run_smoke(rows: list):

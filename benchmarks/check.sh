@@ -15,6 +15,12 @@
 # jnp and pallas-fused backends, with the per-chunk step compiled at most
 # once — so the chunked path can never silently rot.
 #
+# The temporal smoke (benchmarks/run.py --temporal-smoke) runs the
+# incremental sliding-window monitor at a 10% stride and asserts the
+# delta-updated censuses are bit-identical to full per-window recomputes
+# AND process >= 2x fewer census items, on the jnp and pallas-fused
+# backends, with the resident session's step compiled at most once.
+#
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -29,3 +35,6 @@ python -m benchmarks.run --smoke
 
 echo "== streaming census smoke (chunked == monolithic) =="
 python -m benchmarks.run --streaming-smoke
+
+echo "== temporal census smoke (incremental == full, >= 2x item cut) =="
+python -m benchmarks.run --temporal-smoke

@@ -19,11 +19,17 @@ def main() -> None:
     ap.add_argument("--streaming-smoke", action="store_true",
                     help="streamed-vs-monolithic parity gate: tiny graph, "
                          "a max_items budget forcing >= 4 chunks")
+    ap.add_argument("--temporal-smoke", action="store_true",
+                    help="incremental-vs-full sliding-window gate: "
+                         "bit-identity plus >= 2x item reduction at a "
+                         "10%% stride")
     args = ap.parse_args()
 
     rows: list = []
     from benchmarks import census_bench
-    if args.streaming_smoke:
+    if args.temporal_smoke:
+        census_bench.temporal_smoke(rows)
+    elif args.streaming_smoke:
         census_bench.streaming_smoke(rows)
     elif args.smoke:
         census_bench.run_smoke(rows)

@@ -11,15 +11,24 @@ Public API::
     engine = CensusEngine(mesh, backend="pallas-fused")
     census = engine.run(g, max_items=10_000_000)
     engine.stats.summary()                      # chunks, peak plan bytes
+
+    # resident sliding-window session: upload once, recount by edge delta
+    session = engine.session(g)
+    c0 = session.census()
+    c1 = session.update(add_src, add_dst, del_src, del_dst)
 """
 
-from repro.core.digraph import CompactDigraph, from_edges, from_dense, to_dense
+from repro.core.digraph import (
+    CompactDigraph, GraphDelta, apply_delta, canonical_pairs, from_edges,
+    from_dense, from_pairs, to_dense)
 from repro.core.planner import (
-    CensusPlan, PairSpace, build_plan, emit_items, pack_items, pair_space,
-    unpack_items)
+    CensusPlan, PairSpace, base_for_pairs, build_plan, emit_items,
+    emit_items_for_pairs, pack_items, pair_space, unpack_items)
 from repro.core.plan_stream import PlanChunk, PlanChunker, iter_plan_chunks
 from repro.core.census import triad_census, assemble_census
-from repro.core.engine import CensusEngine, EngineStats
+from repro.core.engine import CensusEngine, EngineSession, EngineStats
+from repro.core.incremental import (
+    affected_pair_ids, subset_contribution, verify_delta_closure)
 from repro.core.distributed import (
     triad_census_distributed, triad_census_graph, default_mesh)
 from repro.core.census_ref import (
@@ -28,18 +37,23 @@ from repro.core.tricode import (
     TRIAD_NAMES, TRICODE_TO_CLASS, FOLD_64_TO_16, NUM_CLASSES)
 from repro.core.generators import (
     scale_free_digraph, paper_workload, erdos_renyi_digraph, PAPER_WORKLOADS)
-from repro.core.temporal import TriadMonitor, SECURITY_PATTERNS
+from repro.core.temporal import (
+    TriadMonitor, SECURITY_PATTERNS, SECURITY_PATTERN_INDICES)
 
 __all__ = [
-    "CompactDigraph", "from_edges", "from_dense", "to_dense",
-    "CensusPlan", "PairSpace", "build_plan", "emit_items", "pack_items",
-    "pair_space", "unpack_items",
+    "CompactDigraph", "GraphDelta", "apply_delta", "canonical_pairs",
+    "from_edges", "from_dense", "from_pairs", "to_dense",
+    "CensusPlan", "PairSpace", "base_for_pairs", "build_plan",
+    "emit_items", "emit_items_for_pairs", "pack_items", "pair_space",
+    "unpack_items",
     "PlanChunk", "PlanChunker", "iter_plan_chunks",
-    "CensusEngine", "EngineStats",
+    "CensusEngine", "EngineSession", "EngineStats",
+    "affected_pair_ids", "subset_contribution", "verify_delta_closure",
     "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",
     "TRIAD_NAMES", "TRICODE_TO_CLASS", "FOLD_64_TO_16", "NUM_CLASSES",
     "scale_free_digraph", "paper_workload", "erdos_renyi_digraph",
     "PAPER_WORKLOADS", "TriadMonitor", "SECURITY_PATTERNS",
+    "SECURITY_PATTERN_INDICES",
 ]

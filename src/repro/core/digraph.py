@@ -15,7 +15,7 @@ high bits), enabling binary search — exactly the paper's layout.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -67,11 +67,13 @@ class CompactDigraph:
         assert ((self.packed & 3) != 0).all(), "zero dir code"
 
 
-def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
-    """Build the compact structure from directed edge arrays.
+def clean_arcs(src, dst, n: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Validate, ravel and dedupe a directed edge list.
 
     Self-loops are dropped and duplicate directed edges deduplicated,
-    matching the paper's preprocessing of the raw edge lists.
+    matching the paper's preprocessing of the raw edge lists.  Returns
+    ``(src, dst, n)`` with arcs sorted by ``src * n + dst``.
     """
     src = np.asarray(src, dtype=np.int64).ravel()
     dst = np.asarray(dst, dtype=np.int64).ravel()
@@ -82,16 +84,20 @@ def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
     if src.size and (src.min() < 0 or dst.min() < 0
                      or max(src.max(), dst.max()) >= n):
         raise ValueError("vertex id out of range")
-
     keep = src != dst
     src, dst = src[keep], dst[keep]
-    # dedupe directed edges
-    eid = src * n + dst
-    eid = np.unique(eid)
-    src, dst = eid // n, eid % n
-    num_arcs = src.shape[0]
+    eid = np.unique(src * n + dst)
+    return eid // n, eid % n, int(n)
 
-    # unordered pair key + the bit this arc sets on the (lo, hi) pair code
+
+def arcs_to_pairs(src, dst, n: int
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Aggregate clean arcs into canonical unordered pairs.
+
+    Returns ``(plo, phi, code)`` with ``plo < phi`` ascending by pair key
+    and 2-bit codes (1: lo->hi, 2: hi->lo, 3: mutual) — the pair
+    decomposition shared by :func:`from_edges` and :func:`apply_delta`.
+    """
     lo, hi = np.minimum(src, dst), np.maximum(src, dst)
     pkey = lo * n + hi
     bit = np.where(src < dst, 1, 2).astype(np.int64)   # 1: lo->hi, 2: hi->lo
@@ -100,7 +106,19 @@ def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
     uniq, start = np.unique(pkey, return_index=True)
     # OR the bits per pair (bits are distinct per directed edge after dedup)
     code = np.bitwise_or.reduceat(bit, start) if uniq.size else bit[:0]
-    plo, phi = uniq // n, uniq % n
+    return uniq // n, uniq % n, code
+
+
+def from_pairs(n: int, plo: np.ndarray, phi: np.ndarray, code: np.ndarray,
+               num_arcs: int | None = None) -> CompactDigraph:
+    """Build the CSR structure from canonical pairs (``plo < phi``, codes
+    in {1, 2, 3}) — the second half of :func:`from_edges`, reusable by the
+    incremental :func:`apply_delta` edit path."""
+    plo = np.asarray(plo, dtype=np.int64)
+    phi = np.asarray(phi, dtype=np.int64)
+    code = np.asarray(code, dtype=np.int64)
+    if num_arcs is None:
+        num_arcs = int(((code & 1) != 0).sum() + ((code & 2) != 0).sum())
 
     # each pair emits two CSR entries: (plo: phi, code) and (phi: plo, swap)
     rows = np.concatenate([plo, phi])
@@ -117,6 +135,138 @@ def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
     return CompactDigraph(n=int(n), indptr=indptr,
                           packed=packed.astype(np.int32),
                           num_arcs=int(num_arcs))
+
+
+def from_edges(src, dst, n: int | None = None) -> CompactDigraph:
+    """Build the compact structure from directed edge arrays.
+
+    Self-loops are dropped and duplicate directed edges deduplicated,
+    matching the paper's preprocessing of the raw edge lists.  Composed
+    from the exposed stages :func:`clean_arcs` → :func:`arcs_to_pairs` →
+    :func:`from_pairs`.
+    """
+    src, dst, n = clean_arcs(src, dst, n)
+    plo, phi, code = arcs_to_pairs(src, dst, n)
+    return from_pairs(n, plo, phi, code, num_arcs=src.shape[0])
+
+
+def canonical_pairs(g: CompactDigraph
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Extract the canonical pair decomposition ``(pu, pv, code)`` from a
+    CSR graph: one entry per unordered adjacent pair with ``pu < pv``,
+    ascending by pair key, code relative to (pu, pv)."""
+    rows = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees)
+    nbr = (g.packed >> 2).astype(np.int64)
+    canon = nbr > rows
+    return rows[canon], nbr[canon], (g.packed[canon] & 3).astype(np.int64)
+
+
+@dataclass(frozen=True)
+class GraphDelta:
+    """Record of the pairs perturbed by one :func:`apply_delta` edit.
+
+    ``old_code == 0`` marks a pair that appeared, ``new_code == 0`` one
+    that disappeared; every listed pair satisfies ``old != new``.
+    ``touched`` is the set of vertices whose CSR row changed — exactly the
+    endpoints of the changed pairs — which is what the incremental census
+    (:mod:`repro.core.incremental`) keys its affected-pair discovery on.
+    """
+
+    n: int
+    pair_lo: np.ndarray        #: (C,) int64, lo < hi
+    pair_hi: np.ndarray        #: (C,) int64
+    old_code: np.ndarray       #: (C,) int64 dyad code in g_old (0 absent)
+    new_code: np.ndarray       #: (C,) int64 dyad code in g_new (0 absent)
+    touched: np.ndarray = field(default=None)  #: vertices with changed rows
+
+    def __post_init__(self):
+        if self.touched is None:
+            object.__setattr__(self, "touched", np.unique(
+                np.concatenate([self.pair_lo, self.pair_hi])))
+
+    @property
+    def num_changed(self) -> int:
+        return self.pair_lo.shape[0]
+
+
+def _lookup_pair_codes(g: CompactDigraph, keys: np.ndarray) -> np.ndarray:
+    """Dyad code of each canonical pair key ``lo * n + hi`` in ``g``
+    (0 where the pair is not adjacent).  O(|keys| log m) via the globally
+    sorted CSR entry keys."""
+    if g.packed.size == 0 or keys.size == 0:
+        return np.zeros(keys.shape[0], dtype=np.int64)
+    rows = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees)
+    entry_key = rows * g.n + (g.packed >> 2)   # strictly ascending
+    pos = np.searchsorted(entry_key, keys)
+    safe = np.minimum(pos, entry_key.shape[0] - 1)
+    hit = (pos < entry_key.shape[0]) & (entry_key[safe] == keys)
+    return np.where(hit, (g.packed[safe] & 3).astype(np.int64), 0)
+
+
+def apply_delta(g: CompactDigraph, add_src=None, add_dst=None,
+                del_src=None, del_dst=None
+                ) -> tuple[CompactDigraph, GraphDelta]:
+    """Insert and expire arcs without a full :func:`from_edges` rebuild.
+
+    Set semantics on directed arcs: removals apply first, then insertions
+    (an arc both deleted and added ends up present); inserting an existing
+    arc and deleting an absent one are no-ops; self-loops are dropped.
+    Works at pair granularity — only the pairs containing a delta arc are
+    re-coded, then merged into the existing O(P) pair decomposition —
+    instead of re-sorting and re-deduplicating all m arcs.
+
+    Returns the edited graph and the :class:`GraphDelta` describing every
+    pair whose dyad code changed (the input to incremental censuses).
+    """
+    empty = np.zeros(0, dtype=np.int64)
+
+    def pair_bits(src, dst):
+        if src is None:
+            return empty, empty
+        src, dst, _ = clean_arcs(src, dst, g.n)
+        plo, phi, code = arcs_to_pairs(src, dst, g.n)
+        return plo * g.n + phi, code
+
+    dkey, dbits = pair_bits(del_src, del_dst)
+    akey, abits = pair_bits(add_src, add_dst)
+
+    keys = np.union1d(dkey, akey)
+    if keys.size == 0:
+        return g, GraphDelta(n=g.n, pair_lo=empty, pair_hi=empty,
+                             old_code=empty, new_code=empty)
+    dfull = np.zeros(keys.shape[0], dtype=np.int64)
+    afull = np.zeros(keys.shape[0], dtype=np.int64)
+    dfull[np.searchsorted(keys, dkey)] = dbits
+    afull[np.searchsorted(keys, akey)] = abits
+
+    old = _lookup_pair_codes(g, keys)
+    new = (old & ~dfull) | afull
+    changed = new != old
+    keys, old, new = keys[changed], old[changed], new[changed]
+    delta = GraphDelta(n=g.n, pair_lo=keys // g.n, pair_hi=keys % g.n,
+                       old_code=old, new_code=new)
+    if keys.size == 0:
+        return g, delta
+
+    # merge: drop every changed pair from the old decomposition, then
+    # append the changed pairs that still/now exist with their new codes
+    pu, pv, pcode = canonical_pairs(g)
+    okey = pu * g.n + pv
+    keep = np.ones(okey.shape[0], dtype=bool)
+    if okey.size:
+        pos = np.searchsorted(okey, keys)
+        safe = np.minimum(pos, okey.shape[0] - 1)
+        exists = (pos < okey.shape[0]) & (okey[safe] == keys)
+        keep[pos[exists]] = False
+    ins = new > 0
+    # both sides are already ascending (okey from canonical_pairs, keys
+    # from union1d), so a sorted-merge insert is O(P) — no full re-sort
+    base_key, base_code = okey[keep], pcode[keep]
+    pos = np.searchsorted(base_key, keys[ins])
+    all_key = np.insert(base_key, pos, keys[ins])
+    all_code = np.insert(base_code, pos, new[ins])
+    g_new = from_pairs(g.n, all_key // g.n, all_key % g.n, all_code)
+    return g_new, delta
 
 
 def from_dense(a: np.ndarray) -> CompactDigraph:

@@ -23,6 +23,16 @@ additive closed-form bases), so the streamed census is bit-identical to
 the monolithic dispatch for every backend (``jnp``, ``pallas``,
 ``pallas-fused``), both orient modes, and any chunk size — enforced by
 ``tests/test_streaming.py``.
+
+For *repeated* censuses of an evolving graph (the temporal monitor's
+sliding windows), :meth:`CensusEngine.session` opens a resident-graph
+:class:`EngineSession`: the CSR + pair arrays live on device in
+fixed-capacity buffers, every dispatch reuses one jitted fixed-shape chunk
+step (search depth pinned to ``ceil(log2 n)`` so no graph revision ever
+recompiles it), and edge deltas are applied incrementally — only the
+*affected pairs* (endpoint row changed) are re-counted, old partials
+subtracted and new ones added, bit-identical to a from-scratch census
+(:mod:`repro.core.incremental`).
 """
 
 from __future__ import annotations
@@ -38,8 +48,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.census import (
     BACKENDS, assemble_census, assemble_counts, partials_fn)
-from repro.core.digraph import CompactDigraph
-from repro.core.planner import CensusPlan, build_plan
+from repro.core.digraph import CompactDigraph, GraphDelta, apply_delta
+from repro.core.incremental import (
+    affected_pair_ids, combine, contribution_counts)
+from repro.core.planner import (
+    CensusPlan, base_for_pairs, build_plan, emit_items,
+    emit_items_for_pairs, global_bases, pad_and_pack, pair_space)
 from repro.core.plan_stream import PlanChunker
 
 
@@ -130,6 +144,11 @@ class EngineStats:
     peak_plan_bytes: int = 0
     monolithic_plan_bytes: int = 0
     step_compiles: int = 0
+    #: session-mode extras: valid items a full recompute of the current
+    #: graph would process (== ``items`` for non-incremental runs), and
+    #: the number of affected pairs an incremental update re-counted
+    full_items: int = 0
+    affected_pairs: int = 0
 
     @property
     def chunk_max_over_mean(self) -> float:
@@ -243,6 +262,14 @@ class CensusEngine:
                               pad_to=self.ndev, prune_self=prune_self)
         return self._run_stream(chunker, progress)
 
+    def session(self, g: CompactDigraph, *, orient: str = "none",
+                prune_self: bool = True,
+                max_items: int | None = None) -> "EngineSession":
+        """Open a resident-graph session on ``g`` for repeated / sliding-
+        window censuses (see :class:`EngineSession`)."""
+        return EngineSession(self, g, orient=orient, prune_self=prune_self,
+                             max_items=max_items)
+
     def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
         space = chunker.space
         self.stats = EngineStats(
@@ -300,3 +327,256 @@ class CensusEngine:
         st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
         return assemble_counts(space.n, base_asym, base_mut,
                                hist_acc, inter_acc)
+
+
+def _pad_i32(a: np.ndarray, cap: int) -> np.ndarray:
+    """Zero-pad an int32 array to a fixed capacity (device shape)."""
+    out = np.zeros(cap, dtype=np.int32)
+    out[:a.shape[0]] = a
+    return out
+
+
+class EngineSession:
+    """Resident-graph census session: upload once, recount by delta.
+
+    The graph-shaped device arrays (CSR ``indptr``/``packed`` + pair
+    arrays) are uploaded once per graph revision into fixed-capacity
+    zero-padded buffers (grown geometrically, so revisions of similar size
+    reuse the same compiled step), items are dispatched in fixed
+    ``chunk_shape`` slices through the engine's compile-once chunk step,
+    and the binary-search depth is pinned to ``ceil(log2 n)`` — an upper
+    bound for every possible row — so no future window can force a
+    recompilation.  The padding is inert by construction: items only
+    reference real slots/pairs, and the search stays inside real row
+    bounds.
+
+    Two ways to move the session forward:
+
+    * :meth:`set_graph` + :meth:`census` — full recompute of a new graph
+      (the tumbling-window path; still benefits from the resident arrays
+      and the compile-once step).
+    * :meth:`update` — apply an edge delta via
+      :func:`repro.core.digraph.apply_delta` and recount only the
+      *affected pairs* (see :mod:`repro.core.incremental`):
+      ``C_new = C_old + contrib(A, G_new) − contrib(A, G_old)``,
+      bit-identical to a from-scratch census of the edited graph.
+
+    ``max_items`` bounds the padded items per dispatch (device-memory
+    knob, default: one chunk sized to the initial graph's pre-prune item
+    space); full censuses emit per-slice so host plan memory is
+    O(chunk_shape), and subset recounts are O(subset items).  After every
+    operation :attr:`stats` (also mirrored to ``engine.stats``) records
+    the dispatch schedule, including ``full_items`` — what a from-scratch
+    recompute would have processed — and ``affected_pairs``.
+    """
+
+    def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
+                 orient: str = "none", prune_self: bool = True,
+                 max_items: int | None = None):
+        if max_items is not None and max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {max_items}")
+        self.engine = engine
+        self.orient = orient
+        self.prune_self = prune_self
+        self.n = g.n
+        self.max_items = max_items
+        #: pinned unrolled-search depth: any row has < n entries, so this
+        #: upper bound keeps the jitted step valid for every graph revision
+        self.search_iters = max(1, int(np.ceil(np.log2(max(g.n, 2)))))
+        self._rep, self._item_sh = engine._shardings()
+        self._step = _chunk_step(engine.mesh)
+        self._cap_entries = 0
+        self._cap_pairs = 0
+        self.chunk_shape: int | None = None
+        self._census: np.ndarray | None = None
+        self.last_delta: GraphDelta | None = None
+        self.stats: EngineStats | None = None
+        self._install(g)
+
+    # ------------------------------------------------------------ state
+    @property
+    def graph(self) -> CompactDigraph:
+        return self._g
+
+    @property
+    def space(self):
+        return self._space
+
+    @property
+    def counts(self) -> np.ndarray | None:
+        """The session's running census C_k (None until :meth:`census`)."""
+        return None if self._census is None else self._census.copy()
+
+    @staticmethod
+    def _grown(cap: int, need: int) -> int:
+        cap = max(cap, 256)
+        while cap < need:
+            cap *= 2
+        return cap
+
+    def _install(self, g: CompactDigraph) -> None:
+        """Make ``g`` the resident graph: rebuild the pair space and
+        (re)upload the padded device arrays."""
+        self._g = g
+        space = pair_space(g, orient=self.orient,
+                           prune_self=self.prune_self)
+        self._space = space
+        self._full_items: int | None = None   # lazy per-install stat
+        if self.chunk_shape is None:
+            budget = (self.max_items if self.max_items is not None
+                      else max(space.num_items_preprune, 1))
+            self.chunk_shape = -(-max(int(budget), 1)
+                                 // self.engine.ndev) * self.engine.ndev
+        self._cap_entries = self._grown(self._cap_entries,
+                                        space.packed.shape[0])
+        self._cap_pairs = self._grown(self._cap_pairs, space.num_pairs)
+        put = self.engine._put
+        self._dev = (
+            put(space.indptr.astype(np.int32), self._rep),
+            put(_pad_i32(space.packed, self._cap_entries), self._rep),
+            put(_pad_i32(space.pair_u.astype(np.int32),
+                         self._cap_pairs), self._rep),
+            put(_pad_i32(space.pair_v.astype(np.int32),
+                         self._cap_pairs), self._rep),
+            put(_pad_i32(space.pair_code, self._cap_pairs), self._rep),
+        )
+
+    def set_graph(self, g: CompactDigraph) -> None:
+        """Replace the resident graph wholesale (no delta bookkeeping).
+        Invalidates the running census until :meth:`census` recomputes."""
+        if g.n != self.n:
+            raise ValueError(f"session is pinned to n={self.n}, got {g.n}")
+        self._install(g)
+        self._census = None
+        self.last_delta = None
+
+    # ---------------------------------------------------------- running
+    def _run_batches(self, batches
+                     ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+        """Dispatch item batches (each with at most ``chunk_shape``
+        items) in fixed-shape chunks against the resident device graph;
+        accumulate int64 partials on the host, overlapping batch k+1's
+        emission + upload with batch k's compute.  Fully-pruned batches
+        are skipped without a dispatch."""
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        chunk_items: list[int] = []
+        pending = None
+        for item_pair, item_slot, item_side in batches:
+            num = int(item_pair.shape[0])
+            if num == 0:
+                continue
+            item_sp, item_pv = pad_and_pack(
+                item_pair, item_slot, item_side, self.chunk_shape)
+            sp_dev = self.engine._put(item_sp, self._item_sh)
+            pv_dev = self.engine._put(item_pv, self._item_sh)
+            fut = self._step(*self._dev, sp_dev, pv_dev, self.engine.mesh,
+                             self.search_iters, self.engine.backend)
+            if pending is not None:
+                hist_acc += np.asarray(pending[0], dtype=np.int64)
+                inter_acc += np.asarray(pending[1], dtype=np.int64)
+            pending = fut
+            chunk_items.append(num)
+        if pending is not None:
+            hist_acc += np.asarray(pending[0], dtype=np.int64)
+            inter_acc += np.asarray(pending[1], dtype=np.int64)
+        return hist_acc, inter_acc, chunk_items
+
+    def _slices(self, item_pair, item_slot, item_side):
+        """Yield materialized items in ``chunk_shape``-sized batches."""
+        cs = self.chunk_shape
+        for lo in range(0, int(item_pair.shape[0]), cs):
+            yield (item_pair[lo:lo + cs], item_slot[lo:lo + cs],
+                   item_side[lo:lo + cs])
+
+    def _subset(self, pair_ids: np.ndarray
+                ) -> tuple[np.ndarray, int, list[int]]:
+        """Contribution of a pair subset of the RESIDENT graph.  Host
+        memory is O(subset items) — bounded by the affected neighborhoods
+        in the incremental path, not by the graph's full W."""
+        base_asym, base_mut = base_for_pairs(self._space, pair_ids)
+        items = emit_items_for_pairs(self._space, pair_ids)
+        num_items = int(items[0].shape[0])
+        if num_items == 0:
+            return (contribution_counts(base_asym, base_mut,
+                                        np.zeros(64, np.int64),
+                                        np.zeros(2, np.int64)), 0, [])
+        hist, inter, chunk_items = self._run_batches(self._slices(*items))
+        return (contribution_counts(base_asym, base_mut, hist, inter),
+                num_items, chunk_items)
+
+    def _postprune_items(self) -> int:
+        """Full-recompute item count of the resident graph, computed at
+        most once per graph revision (the degree-orient closed form costs
+        an O(m + P log m) scan — stats only, never the hot path)."""
+        if self._full_items is None:
+            self._full_items = self._space.num_items_postprune()
+        return self._full_items
+
+    def _set_stats(self, chunk_items: list[int], items: int,
+                   full_items: int, affected_pairs: int,
+                   compiles: int) -> None:
+        ndev = self.engine.ndev
+        self.stats = EngineStats(
+            backend=self.engine.backend, ndev=ndev, orient=self.orient,
+            streamed=True, max_items=self.max_items,
+            chunks=len(chunk_items), chunk_shape=self.chunk_shape,
+            items=items, chunk_items=chunk_items,
+            peak_plan_bytes=ITEM_BYTES * self.chunk_shape,
+            monolithic_plan_bytes=ITEM_BYTES
+            * (-(-full_items // ndev) * ndev),
+            step_compiles=compiles,
+            full_items=full_items, affected_pairs=affected_pairs)
+        self.engine.stats = self.stats
+
+    def census(self) -> np.ndarray:
+        """Full census of the resident graph; (re)bases the session's
+        running C_k that :meth:`update` moves forward.  Items are emitted
+        per pre-prune slice of ``chunk_shape``, so host plan memory stays
+        O(chunk_shape) like the streamed engine — never O(W)."""
+        space = self._space
+        cache0 = _jit_cache_size(self._step)
+        w0 = space.num_items_preprune
+        cs = self.chunk_shape
+        batches = (emit_items(space, lo, min(lo + cs, w0))
+                   for lo in range(0, w0, cs))
+        hist, inter, chunk_items = self._run_batches(batches)
+        base_asym, base_mut = global_bases(space)
+        self._census = assemble_counts(self.n, base_asym, base_mut,
+                                       hist, inter)
+        num_items = int(sum(chunk_items))
+        self._full_items = num_items      # the full census just counted it
+        self._set_stats(chunk_items, num_items, num_items,
+                        space.num_pairs,
+                        _jit_cache_size(self._step) - cache0)
+        return self._census.copy()
+
+    def update(self, add_src=None, add_dst=None,
+               del_src=None, del_dst=None) -> np.ndarray:
+        """Apply an edge delta and return the edited graph's census,
+        recounting only the affected pairs — bit-identical to a
+        from-scratch census of the new graph on any backend."""
+        if self._census is None:
+            raise RuntimeError(
+                "no baseline census: call census() before update()")
+        cache0 = _jit_cache_size(self._step)
+        g_new, delta = apply_delta(self._g, add_src, add_dst,
+                                   del_src, del_dst)
+        self.last_delta = delta
+        if delta.num_changed == 0:
+            self._set_stats([], 0, self._postprune_items(), 0,
+                            _jit_cache_size(self._step) - cache0)
+            return self._census.copy()
+
+        aff_old = affected_pair_ids(self._space, delta.touched)
+        contrib_old, items_old, chunks_old = self._subset(aff_old)
+        self._install(g_new)
+        aff_new = affected_pair_ids(self._space, delta.touched)
+        contrib_new, items_new, chunks_new = self._subset(aff_new)
+        self._census = combine(self._census, contrib_old, contrib_new,
+                               self.n)
+        self._set_stats(chunks_old + chunks_new, items_old + items_new,
+                        self._postprune_items(),
+                        int(aff_old.shape[0] + aff_new.shape[0]),
+                        _jit_cache_size(self._step) - cache0)
+        return self._census.copy()

@@ -15,6 +15,11 @@ materialized at once:
   space, and the per-pair closed-form dyadic terms.
 * :func:`emit_items` materializes any contiguous slice ``[lo, hi)`` of
   that item space (with pruning/orientation applied) in O(hi - lo) memory.
+* :func:`emit_items_for_pairs` materializes the items of an *arbitrary
+  pair subset* (with the same pruning/orientation), and
+  :func:`base_for_pairs` gives the matching subset-additive closed-form
+  bases — the pieces the incremental census
+  (:mod:`repro.core.incremental`) diffs affected pairs with.
 
 :func:`build_plan` is the one-slice special case (``[0, W)``);
 :mod:`repro.core.plan_stream` iterates bounded slices for out-of-core
@@ -44,7 +49,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.digraph import CompactDigraph
+from repro.core.digraph import CompactDigraph, canonical_pairs
 
 #: bit 2 of ``pair_code`` in a degree-oriented plan: which side of the pair
 #: (0 = N(u), 1 = N(v)) witnesses the intersection count for the dyadic
@@ -114,6 +119,37 @@ class PairSpace:
         """Size W₀ of the pre-prune flat item space (Σ deg_u + deg_v)."""
         return int(self.offsets[-1])
 
+    def num_items_postprune(self) -> int:
+        """Exact post-prune work-item count W without emitting any items.
+
+        The closed form per pair: with self-pruning each pair loses its
+        two guaranteed self-items; with degree orientation the witness
+        side keeps its ``deg - 1`` non-self items while the other side
+        keeps only the entries past the co-endpoint in its sorted row
+        (the plan-time canonical predicate) — both countable from the CSR
+        in O(P log m) via the globally sorted entry keys.
+        """
+        if self.num_pairs == 0:
+            return 0
+        if self.orient != "degree":
+            w0 = int(self.offsets[-1])
+            return w0 - 2 * self.num_pairs if self.prune_self else w0
+        rows = np.repeat(np.arange(self.n, dtype=np.int64),
+                         self.deg.astype(np.int64))
+        entry_key = rows * self.n + self.nbr.astype(np.int64)
+        pos_v_in_u = (np.searchsorted(entry_key,
+                                      self.pair_u * self.n + self.pair_v)
+                      - self.indptr[self.pair_u])
+        pos_u_in_v = (np.searchsorted(entry_key,
+                                      self.pair_v * self.n + self.pair_u)
+                      - self.indptr[self.pair_v])
+        deg_u = self.deg[self.pair_u].astype(np.int64)
+        deg_v = self.deg[self.pair_v].astype(np.int64)
+        inter = (self.pair_code >> INTER_SIDE_BIT) & 1
+        side0 = np.where(inter == 0, deg_u - 1, deg_u - pos_v_in_u - 1)
+        side1 = np.where(inter == 1, deg_v - 1, deg_v - pos_u_in_v - 1)
+        return int((side0 + side1).sum())
+
     def base_slices(self, starts: np.ndarray) -> tuple[np.ndarray,
                                                        np.ndarray]:
         """Additive (base_asym, base_mut) shares for the slices delimited by
@@ -145,11 +181,8 @@ def pair_space(g: CompactDigraph, orient: str = "none",
     deg = g.degrees
 
     # canonical pairs: CSR entries with nbr > row
-    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
-    canon = nbr > rows
-    pair_u = rows[canon]
-    pair_v = nbr[canon].astype(np.int64)
-    pair_code = (packed[canon] & 3).astype(np.int32)
+    pair_u, pair_v, pair_code = canonical_pairs(g)
+    pair_code = pair_code.astype(np.int32)
     num_pairs = pair_u.shape[0]
 
     deg_u, deg_v = deg[pair_u], deg[pair_v]
@@ -201,14 +234,30 @@ def emit_items(space: PairSpace, lo: int, hi: int
                - np.maximum(offsets[ids], lo))
     item_pair = np.repeat(ids, overlap)
     within = np.arange(lo, hi, dtype=np.int64) - offsets[item_pair]
+    return _materialize_items(space, item_pair, within)
 
+
+def _materialize_items(space: PairSpace, item_pair: np.ndarray,
+                       within: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Turn (pair, within-pair position) coordinates into concrete pruned
+    ``(pair, slot, side)`` items — the tail shared by :func:`emit_items`
+    and :func:`emit_items_for_pairs`, so the contiguous-slice and
+    pair-subset paths can never diverge."""
     deg_u = space.deg[space.pair_u[item_pair]]
     item_side = (within >= deg_u).astype(np.int8)
     item_slot = np.where(
         item_side == 0,
         space.indptr[space.pair_u[item_pair]] + within,
         space.indptr[space.pair_v[item_pair]] + within - deg_u)
+    return prune_items(space, item_pair, item_slot, item_side)
 
+
+def prune_items(space: PairSpace, item_pair: np.ndarray,
+                item_slot: np.ndarray, item_side: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Apply the space's pruning/orientation policy to raw items — the
+    shared tail of :func:`emit_items` and :func:`emit_items_for_pairs`."""
     if space.orient == "degree":
         inter_side = (space.pair_code[item_pair] >> INTER_SIDE_BIT) & 1
         w_ids = space.nbr[item_slot]
@@ -228,6 +277,41 @@ def emit_items(space: PairSpace, lo: int, hi: int
                  ((item_side == 1) & (w_ids == space.pair_u[item_pair])))
         return item_pair[keep], item_slot[keep], item_side[keep]
     return item_pair, item_slot, item_side
+
+
+def emit_items_for_pairs(space: PairSpace, pair_ids
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Materialize the (pruned) work items of an arbitrary pair subset.
+
+    ``pair_ids`` indexes the space's canonical pair arrays; items come out
+    grouped by pair in the given order, in O(Σ counts[pair_ids]) memory.
+    The union over a partition of all pairs reproduces exactly the items
+    of :func:`emit_items` over ``[0, W₀)`` (possibly permuted — census
+    partials are order-invariant integer sums), which is what makes
+    per-subset census contributions additive.
+    """
+    ids = np.asarray(pair_ids, dtype=np.int64).ravel()
+    empty = np.zeros(0, np.int64)
+    if ids.size == 0:
+        return empty, empty, empty.astype(np.int8)
+    if ids.min() < 0 or ids.max() >= space.num_pairs:
+        raise ValueError(f"pair id outside [0, {space.num_pairs})")
+    counts = space.counts[ids]
+    total = int(counts.sum())
+    item_pair = np.repeat(ids, counts)
+    starts = np.cumsum(counts) - counts
+    within = np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+    return _materialize_items(space, item_pair, within)
+
+
+def base_for_pairs(space: PairSpace, pair_ids) -> tuple[int, int]:
+    """Subset-additive ``(base_asym, base_mut)`` closed-form shares for an
+    arbitrary pair subset; over a partition of all pairs these sum exactly
+    to :func:`global_bases`."""
+    ids = np.asarray(pair_ids, dtype=np.int64).ravel()
+    mut = space.pair_mut[ids]
+    term = space.pair_term[ids]
+    return int(term[~mut].sum()), int(term[mut].sum())
 
 
 def pad_and_pack(item_pair: np.ndarray, item_slot: np.ndarray,
