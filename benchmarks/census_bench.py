@@ -266,6 +266,142 @@ def streaming_smoke(rows: list):
                      f"step_compiles={compiles_first};parity=ok"))
 
 
+def device_emission(rows: list):
+    """Tentpole rows: host vs device work-item emission.
+
+    ``emit="host"`` (the PR 3 baseline) materializes, packs and uploads
+    every O(W) work item per chunk; ``emit="device"`` ships O(pairs)
+    descriptors and expands pairs→items in-kernel.  Same chunk schedule,
+    bit-identical censuses (asserted in-row), and the per-chunk
+    host→device plan bytes shrink by the mean items-per-pair factor.
+    """
+    from repro.core import CensusEngine, pair_space
+
+    g = paper_workload("webgraph", n=6_000, avg_degree=10.0, seed=0)
+    w_pre = pair_space(g).num_items_preprune
+    max_items = -(-w_pre // 32)
+    res = {}
+    for emit in ("host", "device"):
+        engine = CensusEngine(backend="jnp", emit=emit)
+        dt, c = _timeit(engine.run, g, max_items=max_items)
+        res[emit] = (dt, c, engine.stats)
+        st = engine.stats
+        rows.append((f"emit_stream_{emit}", dt * 1e6,
+                     f"chunks={st.chunks};items={st.items};"
+                     f"plan_upload_bytes_per_chunk={st.plan_upload_bytes}"))
+    if not (res["host"][1] == res["device"][1]).all():
+        raise AssertionError("device-emit census != host-emit census")
+    ratio = (res["host"][2].plan_upload_bytes
+             / res["device"][2].plan_upload_bytes)
+    rows.append(("emit_upload_reduction", ratio * 1e6,
+                 "host/device plan bytes per chunk (same schedule)"))
+
+    # warm incremental-update walltime: resident sessions on the
+    # monitoring workload, timed over a fixed reciprocal delta after
+    # warmup — the row the device-emission path must improve
+    rng = np.random.default_rng(0)
+    window = 4000
+    src, dst, n = _monitor_stream(rng, 80, 3000, 800, 2 * window)
+    from repro.core import from_edges
+    g = from_edges(src[:window], dst[:window], n=n)
+    # reciprocal delta: arcs of the NEXT window absent from g (so add
+    # followed by delete restores g exactly — set semantics)
+    base = src[:window] * n + dst[:window]
+    cand_s, cand_d = src[window:], dst[window:]
+    fresh = ~np.isin(cand_s * n + cand_d, base) & (cand_s != cand_d)
+    d_src, d_dst = cand_s[fresh][:400], cand_d[fresh][:400]
+    dts = {}
+    for emit in ("host", "device"):
+        session = CensusEngine(backend="jnp", emit=emit).session(
+            g, max_items=4096)
+        want = session.census()
+
+        def cycle():
+            session.update(d_src, d_dst)
+            return session.update(del_src=d_src, del_dst=d_dst)
+
+        dt, back = _timeit(cycle)
+        dts[emit] = dt / 2                 # one update per half-cycle
+        if not (back == want).all():
+            raise AssertionError(f"emit={emit}: reciprocal updates "
+                                 "did not restore the census")
+        st = session.stats
+        rows.append((f"emit_incr_update_{emit}", dts[emit] * 1e6,
+                     f"affected_pairs={st.affected_pairs};"
+                     f"items={st.items};"
+                     f"plan_upload_bytes_per_chunk={st.plan_upload_bytes}"))
+    rows.append(("emit_incr_update_speedup",
+                 dts["host"] / max(dts["device"], 1e-9) * 1e6,
+                 "host-emission walltime / device-emission walltime, "
+                 "warm incremental update"))
+
+
+def emit_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --emit-smoke): device-emission
+    censuses must be bit-identical to host emission on the jnp and
+    pallas-fused backends — full streamed runs (>= 4 chunks, matching
+    per-chunk valid-item counts) and incremental session updates — with
+    >= 4x fewer host→device plan bytes per chunk on both paths."""
+    from repro.core import CensusEngine, pair_space
+
+    g = paper_workload("orkut", n=400, avg_degree=12.0, seed=0)
+    w_pre = pair_space(g).num_items_preprune
+    max_items = max(w_pre // 6, 1)
+    rng = np.random.default_rng(1)
+    add = (rng.integers(0, 400, 60), rng.integers(0, 400, 60))
+    rem = (rng.integers(0, 400, 60), rng.integers(0, 400, 60))
+    for backend in ("jnp", "pallas-fused"):
+        orients = ("none", "degree") if backend == "jnp" else ("none",)
+        for orient in orients:
+            t0 = time.perf_counter()
+            # full streamed parity + per-chunk upload reduction
+            eng = {}
+            census = {}
+            for emit in ("host", "device"):
+                eng[emit] = CensusEngine(backend=backend, emit=emit)
+                census[emit] = eng[emit].run(g, max_items=max_items,
+                                             orient=orient)
+            if not (census["host"] == census["device"]).all():
+                raise AssertionError(
+                    f"{backend}/{orient}: device-emit != host-emit")
+            st_h, st_d = eng["host"].stats, eng["device"].stats
+            if st_h.chunks < 4:
+                raise AssertionError(f"smoke too coarse: {st_h.chunks}")
+            if st_d.chunk_items != st_h.chunk_items:
+                raise AssertionError(
+                    f"{backend}/{orient}: device-counted valid items "
+                    f"diverge from the host plan")
+            if st_h.plan_upload_bytes < 4 * st_d.plan_upload_bytes:
+                raise AssertionError(
+                    f"{backend}/{orient}: full-run upload reduction "
+                    f"{st_h.plan_upload_bytes}/{st_d.plan_upload_bytes} "
+                    "< 4x")
+            # incremental session parity + upload reduction
+            ses = {e: CensusEngine(backend=backend, emit=e).session(
+                g, orient=orient, max_items=max_items)
+                for e in ("host", "device")}
+            if not (ses["host"].census() == ses["device"].census()).all():
+                raise AssertionError(
+                    f"{backend}/{orient}: session census diverges")
+            got_h = ses["host"].update(*add, *rem)
+            got_d = ses["device"].update(*add, *rem)
+            if not (got_h == got_d).all():
+                raise AssertionError(
+                    f"{backend}/{orient}: incremental update diverges")
+            ib_h = ses["host"].stats.plan_upload_bytes
+            ib_d = ses["device"].stats.plan_upload_bytes
+            if ib_h < 4 * ib_d:
+                raise AssertionError(
+                    f"{backend}/{orient}: incremental upload reduction "
+                    f"{ib_h}/{ib_d} < 4x")
+            dt = time.perf_counter() - t0
+            rows.append((f"emit_smoke_{backend}_{orient}", dt * 1e6,
+                         f"chunks={st_h.chunks};"
+                         f"full_bytes={st_h.plan_upload_bytes}v"
+                         f"{st_d.plan_upload_bytes};"
+                         f"incr_bytes={ib_h}v{ib_d};parity=ok"))
+
+
 def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
                     backbone_every=2):
     """Monitoring workload: a persistent service backbone (a fixed server
@@ -391,6 +527,7 @@ def run(rows: list):
     kernel_throughput(rows)
     fused_vs_reference(rows)
     streaming_vs_monolithic(rows)
+    device_emission(rows)
     temporal_windows(rows)
 
 

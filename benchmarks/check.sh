@@ -21,6 +21,12 @@
 # AND process >= 2x fewer census items, on the jnp and pallas-fused
 # backends, with the resident session's step compiled at most once.
 #
+# The emit smoke (benchmarks/run.py --emit-smoke) asserts device-side
+# work-item emission (descriptor upload + in-kernel pair→item expansion)
+# is bit-identical to host emission on the jnp and pallas-fused backends
+# — full streamed runs and incremental session updates — while shipping
+# >= 4x fewer host→device plan bytes per chunk on both paths.
+#
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -38,3 +44,6 @@ python -m benchmarks.run --streaming-smoke
 
 echo "== temporal census smoke (incremental == full, >= 2x item cut) =="
 python -m benchmarks.run --temporal-smoke
+
+echo "== emit smoke (device == host emission, >= 4x fewer plan bytes) =="
+python -m benchmarks.run --emit-smoke

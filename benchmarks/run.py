@@ -1,5 +1,7 @@
 """Benchmark harness — one entry per paper table/figure (census half) plus
-LM substrate micro-benchmarks. Prints ``name,us_per_call,derived`` CSV.
+LM substrate micro-benchmarks. Prints ``name,us_per_call,derived`` CSV;
+``--json PATH`` additionally writes the rows as machine-readable JSON so
+the perf trajectory is tracked across PRs.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 """
@@ -7,7 +9,23 @@ Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def write_json(path: str, rows: list) -> None:
+    """Persist the benchmark rows as a ``BENCH_*.json``-style file: one
+    object per row (name, us_per_call, derived, backend)."""
+    import jax
+    backend = jax.default_backend()
+    payload = [
+        {"name": name, "us_per_call": round(us, 3), "derived": derived,
+         "backend": backend}
+        for name, us, derived in rows
+    ]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
@@ -23,11 +41,21 @@ def main() -> None:
                     help="incremental-vs-full sliding-window gate: "
                          "bit-identity plus >= 2x item reduction at a "
                          "10%% stride")
+    ap.add_argument("--emit-smoke", action="store_true",
+                    help="device-vs-host emission gate: bit-identical "
+                         "censuses (full + incremental) with >= 4x fewer "
+                         "host-to-device plan bytes per chunk")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as machine-readable JSON "
+                         "(name, us_per_call, derived, backend), e.g. "
+                         "BENCH_census.json")
     args = ap.parse_args()
 
     rows: list = []
     from benchmarks import census_bench
-    if args.temporal_smoke:
+    if args.emit_smoke:
+        census_bench.emit_smoke(rows)
+    elif args.temporal_smoke:
         census_bench.temporal_smoke(rows)
     elif args.streaming_smoke:
         census_bench.streaming_smoke(rows)
@@ -43,6 +71,8 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
     sys.stdout.flush()
+    if args.json:
+        write_json(args.json, rows)
 
 
 if __name__ == "__main__":

@@ -70,6 +70,10 @@ def main():
                     help="z-score alarm threshold (sliding windows "
                          "dilute a burst across the overlap, so their "
                          "peak z is lower than tumbling)")
+    ap.add_argument("--emit", choices=("device", "host"), default=None,
+                    help="work-item emission mode (default: the engine "
+                         "default, device — stream O(pairs) descriptors "
+                         "and expand pairs→items in-kernel)")
     ap.add_argument("--verbose", action="store_true",
                     help="print the per-window engine summary lines")
     args = ap.parse_args()
@@ -84,7 +88,7 @@ def main():
         n_hosts, window=per_window, stride=stride, history=history,
         threshold=args.threshold, backend=args.backend,
         incremental=not args.no_incremental,
-        max_items=4096)
+        max_items=4096, emit=args.emit)
 
     scan_size = 200
     attack_windows = {25, 26, 27}

@@ -22,13 +22,16 @@ from repro.core.digraph import (
     CompactDigraph, GraphDelta, apply_delta, canonical_pairs, from_edges,
     from_dense, from_pairs, to_dense)
 from repro.core.planner import (
-    CensusPlan, PairSpace, base_for_pairs, build_plan, emit_items,
-    emit_items_for_pairs, pack_items, pair_space, unpack_items)
+    CensusPlan, DescriptorWindow, PairSpace, base_for_pairs, build_plan,
+    descriptor_window, emit_items, emit_items_for_pairs,
+    iter_descriptor_windows, pack_items, pair_space, unpack_items)
 from repro.core.plan_stream import PlanChunk, PlanChunker, iter_plan_chunks
 from repro.core.census import triad_census, assemble_census
-from repro.core.engine import CensusEngine, EngineSession, EngineStats
+from repro.core.engine import (
+    CensusEngine, EMIT_MODES, EngineSession, EngineStats)
 from repro.core.incremental import (
-    affected_pair_ids, subset_contribution, verify_delta_closure)
+    affected_pair_ids, subset_contribution, subset_descriptor_windows,
+    verify_delta_closure)
 from repro.core.distributed import (
     triad_census_distributed, triad_census_graph, default_mesh)
 from repro.core.census_ref import (
@@ -43,12 +46,14 @@ from repro.core.temporal import (
 __all__ = [
     "CompactDigraph", "GraphDelta", "apply_delta", "canonical_pairs",
     "from_edges", "from_dense", "from_pairs", "to_dense",
-    "CensusPlan", "PairSpace", "base_for_pairs", "build_plan",
-    "emit_items", "emit_items_for_pairs", "pack_items", "pair_space",
-    "unpack_items",
+    "CensusPlan", "DescriptorWindow", "PairSpace", "base_for_pairs",
+    "build_plan", "descriptor_window", "emit_items",
+    "emit_items_for_pairs", "iter_descriptor_windows", "pack_items",
+    "pair_space", "unpack_items",
     "PlanChunk", "PlanChunker", "iter_plan_chunks",
-    "CensusEngine", "EngineSession", "EngineStats",
-    "affected_pair_ids", "subset_contribution", "verify_delta_closure",
+    "CensusEngine", "EMIT_MODES", "EngineSession", "EngineStats",
+    "affected_pair_ids", "subset_contribution",
+    "subset_descriptor_windows", "verify_delta_closure",
     "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",

@@ -27,6 +27,15 @@ partials either as one monolithic plan dispatch or as a stream of bounded
 fixed-shape chunks accumulated on the host (the partials are integer sums,
 so any chunking of the work items yields bit-identical censuses).
 :func:`triad_census` below is the thin single-device wrapper.
+
+Work items reach a dispatch in one of two forms: pre-packed item words
+(:func:`census_partials` — host emission) or pair descriptors that the
+device expands back into items itself (:func:`census_partials_desc`, via
+:func:`expand_work_items` — device emission, no host-side item
+materialization).  Both feed the same :func:`classify_items`, and every
+item the host-side planner would have pruned is provably a zero
+contribution of the classification masks, which is why the two forms are
+bit-identical on every backend and orient mode.
 """
 
 from __future__ import annotations
@@ -102,6 +111,90 @@ def classify_items(indptr, packed, pair_u, pair_v, pair_code,
     return tricode, count_mask, inter_mask, c_uv == 3
 
 
+def expand_work_items(indptr, pair_u, pair_v, desc_pair, desc_cum,
+                      desc_within0, anchors, num_valid, idx,
+                      desc_iters: int):
+    """Map flat item indices back to ``(pair, slot, side, valid)`` from a
+    per-pair descriptor window — the device-resident inverse of the host
+    planner's ``emit_items``.
+
+    ``desc_cum`` is the window-local cumulative-offset table (padded with
+    :data:`repro.core.planner.DESC_CUM_PAD`, which is larger than any
+    real index, so the lower-bound search can never land on padding).
+    ``anchors`` pre-resolves each :data:`DESC_ANCHOR_STRIDE`-item span to
+    its first descriptor, so the per-lane search covers at most
+    ``stride/2 + 1`` candidates (every pair spans >= 2 pre-prune items)
+    and ``desc_iters`` is the constant
+    :data:`repro.core.planner.DESC_SEARCH_ITERS` — extra iterations are
+    harmless (the converged lower bound is a fixed point of the search
+    body, and the result is clamped into the anchored range).
+    ``num_valid`` is a traced scalar: lanes past it are padding and come
+    out clamped to safe (pair 0, slot 0) coordinates.
+    """
+    from repro.core.planner import DESC_ANCHOR_STRIDE
+    num_descs = desc_cum.shape[0]
+    a = jnp.clip(idx // DESC_ANCHOR_STRIDE, 0, anchors.shape[0] - 1)
+    lo_d = anchors[a]
+    hi_d = jnp.minimum(lo_d + DESC_ANCHOR_STRIDE // 2 + 1, num_descs)
+    d = segment_searchsorted(desc_cum, lo_d, hi_d, idx + 1,
+                             desc_iters) - 1
+    d = jnp.minimum(jnp.clip(d, 0, num_descs - 1), hi_d - 1)
+    pair = desc_pair[d]
+    within = desc_within0[d] + idx - desc_cum[d]
+    u = pair_u[pair]
+    v = pair_v[pair]
+    row_u = indptr[u]
+    deg_u = indptr[u + 1] - row_u
+    side = (within >= deg_u).astype(jnp.int32)
+    slot = jnp.where(side == 0, row_u + within, indptr[v] + within - deg_u)
+    valid = idx < num_valid
+    return (jnp.where(valid, pair, 0), jnp.where(valid, slot, 0),
+            jnp.where(valid, side, 0), valid)
+
+
+def prune_keep_mask(packed, pair_u, pair_v, pair_code,
+                    item_pair, item_slot, item_side, item_valid,
+                    orient: str, prune_self: bool):
+    """Device-side mirror of the planner's plan-time pruning predicate
+    (:func:`repro.core.planner.prune_items`): which expanded items a host
+    plan would have shipped.  Pruned items already contribute zero to
+    every census counter (their count/inter masks are provably false), so
+    this mask only feeds the valid-item statistics — dropping it can never
+    change a census."""
+    w_ids = packed[item_slot] >> 2
+    u_of = pair_u[item_pair]
+    v_of = pair_v[item_pair]
+    not_self = (w_ids != u_of) & (w_ids != v_of)
+    if orient == "degree":
+        inter_side = (pair_code[item_pair] >> 2) & 1
+        can_count = jnp.where(item_side == 0, w_ids > v_of, w_ids > u_of)
+        return item_valid & not_self & (
+            (item_side == inter_side) | can_count)
+    if prune_self:
+        return item_valid & not_self
+    return item_valid
+
+
+def _partials_reduce(tricode, count_mask, inter_mask, is_mut,
+                     histogram_fn=None, keep_mask=None):
+    """Shared reduction tail: fold per-item classifications into the
+    ``hist64`` histogram and the intersection counters (plus a valid-item
+    count when ``keep_mask`` is given — the device-emission stats lane)."""
+    if histogram_fn is None:
+        hist64 = jnp.zeros(64, jnp.int32).at[
+            jnp.where(count_mask, tricode, 0)
+        ].add(count_mask.astype(jnp.int32))
+    else:
+        hist64 = histogram_fn(tricode, count_mask)
+    lanes = [
+        jnp.sum((inter_mask & ~is_mut).astype(jnp.int32)),
+        jnp.sum((inter_mask & is_mut).astype(jnp.int32)),
+    ]
+    if keep_mask is not None:
+        lanes.append(jnp.sum(keep_mask.astype(jnp.int32)))
+    return hist64, jnp.stack(lanes)
+
+
 def census_partials(indptr, packed, pair_u, pair_v, pair_code,
                     item_sp, item_pv, search_iters: int, histogram_fn=None):
     """Shard-local partials from packed work items: (hist64, inter2) int32."""
@@ -112,17 +205,35 @@ def census_partials(indptr, packed, pair_u, pair_v, pair_code,
     tricode, count_mask, inter_mask, is_mut = classify_items(
         indptr, packed, pair_u, pair_v, pair_code,
         item_pair, item_slot, item_side, item_valid, search_iters)
-    if histogram_fn is None:
-        hist64 = jnp.zeros(64, jnp.int32).at[
-            jnp.where(count_mask, tricode, 0)
-        ].add(count_mask.astype(jnp.int32))
-    else:
-        hist64 = histogram_fn(tricode, count_mask)
-    inter = jnp.stack([
-        jnp.sum((inter_mask & ~is_mut).astype(jnp.int32)),
-        jnp.sum((inter_mask & is_mut).astype(jnp.int32)),
-    ])
-    return hist64, inter
+    return _partials_reduce(tricode, count_mask, inter_mask, is_mut,
+                            histogram_fn)
+
+
+def census_partials_desc(indptr, packed, pair_u, pair_v, pair_code,
+                         desc_pair, desc_cum, desc_within0, anchors,
+                         num_valid, idx, search_iters: int,
+                         desc_iters: int, orient: str, prune_self: bool,
+                         histogram_fn=None):
+    """Shard-local partials from *pair descriptors*: ``(hist64, inter3)``.
+
+    The device expands each flat index in ``idx`` back to its work item
+    (:func:`expand_work_items`) and classifies it in place — no host-side
+    item materialization, no O(W) item upload.  ``inter3`` carries the two
+    intersection counters plus the count of items the plan-time pruning
+    predicate would have kept (:func:`prune_keep_mask`) so the engine's
+    valid-item statistics stay comparable with host emission.
+    """
+    item_pair, item_slot, item_side, item_valid = expand_work_items(
+        indptr, pair_u, pair_v, desc_pair, desc_cum, desc_within0,
+        anchors, num_valid, idx, desc_iters)
+    tricode, count_mask, inter_mask, is_mut = classify_items(
+        indptr, packed, pair_u, pair_v, pair_code,
+        item_pair, item_slot, item_side, item_valid, search_iters)
+    keep = prune_keep_mask(packed, pair_u, pair_v, pair_code,
+                           item_pair, item_slot, item_side, item_valid,
+                           orient, prune_self)
+    return _partials_reduce(tricode, count_mask, inter_mask, is_mut,
+                            histogram_fn, keep_mask=keep)
 
 
 def assemble_counts(n: int, base_asym: int, base_mut: int,
@@ -162,6 +273,28 @@ def partials_fn(backend: str, search_iters: int):
         from repro.kernels import ops as kops
         histogram_fn = kops.tricode_histogram
     return functools.partial(census_partials, search_iters=search_iters,
+                             histogram_fn=histogram_fn)
+
+
+def desc_partials_fn(backend: str, search_iters: int, desc_iters: int,
+                     orient: str, prune_self: bool):
+    """Descriptor-expansion counterpart of :func:`partials_fn`: maps the
+    9 device arrays (graph + pairs + descriptor window + valid count) and
+    the resident flat-index array to ``(hist64, inter3)``."""
+    if backend == "pallas-fused":
+        from repro.kernels import ops as kops
+        return functools.partial(kops.fused_census_desc_partials,
+                                 search_iters=search_iters,
+                                 desc_iters=desc_iters, orient=orient,
+                                 prune_self=prune_self)
+    histogram_fn = None
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        histogram_fn = kops.tricode_histogram
+    return functools.partial(census_partials_desc,
+                             search_iters=search_iters,
+                             desc_iters=desc_iters, orient=orient,
+                             prune_self=prune_self,
                              histogram_fn=histogram_fn)
 
 

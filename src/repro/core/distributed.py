@@ -50,15 +50,19 @@ def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
 def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
                        backend: str = "jnp", orient: str = "none",
                        max_items: int | None = None,
-                       progress=None) -> np.ndarray:
+                       progress=None,
+                       emit: str | None = None) -> np.ndarray:
     """Convenience: plan + distribute + count in one call.
 
-    ``max_items=None`` reproduces the historical monolithic dispatch;
+    ``max_items=None`` reproduces the historical one-dispatch schedule;
     an integer budget streams the plan in O(max_items) host memory.
+    ``emit`` picks the work-item path (default ``"device"``: descriptor
+    upload + in-kernel pair→item expansion; ``"host"``: packed-item
+    upload) — bit-identical either way.
     """
     from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
     engine = CensusEngine(mesh=mesh, backend=backend)
     return engine.run(g, max_items=max_items, orient=orient,
-                      progress=progress)
+                      progress=progress, emit=emit)

@@ -18,6 +18,22 @@ adds the out-of-core mode that the monolithic drivers could not express:
   of chunk k, and accumulates the ``hist64``/``inter`` partials in int64
   on the host.  Peak plan memory is O(max_items) instead of O(W).
 
+Orthogonally, ``emit`` picks how chunks reach the device:
+
+* ``emit="device"`` (default): the host ships each chunk as ONE packed
+  buffer of O(pairs) descriptors + anchors
+  (:class:`repro.core.planner.DescriptorWindow`); the device step maps
+  every flat item index back to its pair via an anchored constant-depth
+  lower-bound search, derives slot/side arithmetically against the
+  resident CSR, and applies the pruning predicate in-kernel — no item is
+  ever materialized on the host, and per-chunk host→device plan traffic
+  drops from O(max_items) to O(pairs-per-chunk)
+  (``EngineStats.plan_upload_bytes``).
+* ``emit="host"``: the original path — emit, prune, pack and upload the
+  O(W) item words in numpy.  Kept as the oracle (bit-identical censuses
+  by construction: every plan-pruned item is provably a zero
+  contribution of the classification masks) and for prebuilt plans.
+
 Partials are perfectly mergeable across chunks (integer histogram sums and
 additive closed-form bases), so the streamed census is bit-identical to
 the monolithic dispatch for every backend (``jnp``, ``pallas``,
@@ -47,14 +63,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.census import (
-    BACKENDS, assemble_census, assemble_counts, partials_fn)
+    BACKENDS, assemble_census, assemble_counts, desc_partials_fn,
+    partials_fn)
 from repro.core.digraph import CompactDigraph, GraphDelta, apply_delta
 from repro.core.incremental import (
-    affected_pair_ids, combine, contribution_counts)
+    affected_pair_ids, combine, contribution_counts,
+    subset_descriptor_windows)
 from repro.core.planner import (
-    CensusPlan, base_for_pairs, build_plan, emit_items,
-    emit_items_for_pairs, global_bases, pad_and_pack, pair_space)
+    DESC_BYTES, DESC_SEARCH_ITERS, CensusPlan, base_for_pairs,
+    build_plan, emit_items, emit_items_for_pairs, global_bases,
+    iter_descriptor_windows, max_pairs_per_window, num_desc_anchors,
+    pad_and_pack, pair_space)
 from repro.core.plan_stream import PlanChunker
+
+#: work-item emission modes: ``device`` streams O(pairs) descriptors and
+#: expands pairs→items in-kernel (the default); ``host`` materializes and
+#: uploads every packed item in numpy (the original path, kept as the
+#: oracle and for prebuilt monolithic plans)
+EMIT_MODES = ("device", "host")
 
 
 def _chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
@@ -109,6 +135,58 @@ def _chunk_step(mesh=None):
     return _chunk_step_plain if platform == "cpu" else _chunk_step_donated
 
 
+def _desc_step_impl(indptr, packed, pair_u, pair_v, pair_code,
+                    desc_words, idx, mesh, search_iters, desc_iters,
+                    backend, orient, prune_self):
+    """One fixed-shape device-emission dispatch: ``(hist64, inter3)``.
+
+    ``desc_words`` is the window's single packed int32 buffer
+    (:meth:`repro.core.planner.DescriptorWindow.device_words` — one
+    upload per chunk instead of four); ``idx`` is the resident flat
+    item-index array (created on device once per run/session, sharded
+    over the mesh when distributed) — everything else is replicated.  No
+    buffers are donated: the per-chunk upload is the O(pairs) descriptor
+    buffer, small enough that HBM aliasing buys nothing.
+    """
+    num_anchors = num_desc_anchors(idx.shape[0])
+    num_descs = (desc_words.shape[0] - 1 - num_anchors) // 3
+    partials = desc_partials_fn(backend, search_iters, desc_iters,
+                                orient, prune_self)
+
+    def run(ip, pk, pu, pv, pc, words, ix):
+        nv = words[:1]
+        dp = words[1:1 + num_descs]
+        dc = words[1 + num_descs:1 + 2 * num_descs]
+        dw = words[1 + 2 * num_descs:1 + 3 * num_descs]
+        an = words[1 + 3 * num_descs:]
+        return partials(ip, pk, pu, pv, pc, dp, dc, dw, an, nv, ix)
+
+    if mesh is None:
+        return run(indptr, packed, pair_u, pair_v, pair_code,
+                   desc_words, idx)
+
+    axes = mesh.axis_names
+
+    def shard_fn(*args):
+        hist64, inter = run(*args)
+        return jax.lax.psum(hist64, axes), jax.lax.psum(inter, axes)
+
+    rep = P()                 # graph + pair + descriptor arrays replicated
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(rep, rep, rep, rep, rep, rep,
+                  P(axes)),   # only the item-index space is sharded
+        out_specs=(rep, rep),
+        check_vma=(backend == "jnp"))
+    return fn(indptr, packed, pair_u, pair_v, pair_code, desc_words, idx)
+
+
+_desc_step = functools.partial(
+    jax.jit, static_argnames=(
+        "mesh", "search_iters", "desc_iters", "backend", "orient",
+        "prune_self"))(_desc_step_impl)
+
+
 def _jit_cache_size(step) -> int:
     """Compile counter via jax's private ``_cache_size`` — if a jax
     upgrade drops it, only the ``step_compiles`` stat degrades (to 0),
@@ -120,12 +198,29 @@ def _jit_cache_size(step) -> int:
 ITEM_BYTES = 8
 
 
+def _land_desc_partials(fut, hist_acc: np.ndarray, inter_acc: np.ndarray,
+                        chunk_items: list) -> int:
+    """Accumulate one descriptor-step result in place — hist64 into
+    ``hist_acc``, the two intersection lanes into ``inter_acc`` — and
+    record/return lane 2, the chunk's device-counted valid items (the
+    one place that knows the ``inter3`` layout)."""
+    hist_acc += np.asarray(fut[0], dtype=np.int64)
+    inter3 = np.asarray(fut[1], dtype=np.int64)
+    inter_acc += inter3[:2]
+    num = int(inter3[2])
+    chunk_items.append(num)
+    return num
+
+
 @dataclass
 class EngineStats:
     """Execution stats of the last :class:`CensusEngine` run.
 
-    ``peak_plan_bytes`` is the packed-item bytes resident per dispatch
-    (the streaming memory ceiling the ``max_items`` knob tunes);
+    ``peak_plan_bytes`` is the per-dispatch item-lane footprint at packed
+    -item width (``ITEM_BYTES * chunk_shape`` — the streaming ceiling the
+    ``max_items`` knob tunes, comparable across emit modes; under
+    ``emit="device"`` nothing item-shaped is HOST-resident, and the bytes
+    actually uploaded per chunk are ``plan_upload_bytes``);
     ``monolithic_plan_bytes`` is what a single dispatch of the same work
     would have shipped.  ``step_compiles`` counts fresh compilations of
     the per-chunk step during the run — 0 or 1 for a streamed run, never
@@ -149,6 +244,18 @@ class EngineStats:
     #: the number of affected pairs an incremental update re-counted
     full_items: int = 0
     affected_pairs: int = 0
+    #: work-item emission mode of the run ("host" or "device")
+    emit: str = "host"
+    #: fixed per-dispatch descriptor-array length (device emission only)
+    desc_shape: int = 0
+    #: host→device *plan* bytes shipped per dispatch: the packed item
+    #: words under host emission, the descriptor window (+ 4-byte valid
+    #: count) under device emission — the traffic the emit knob trades
+    plan_upload_bytes: int = 0
+    #: jitted-step compilations forced by session capacity growth (graph
+    #: buffers regrown past their padded device shapes), counted apart
+    #: from ``step_compiles`` so the compile-once contract stays auditable
+    capacity_recompiles: int = 0
 
     @property
     def chunk_max_over_mean(self) -> float:
@@ -161,10 +268,11 @@ class EngineStats:
     def summary(self) -> str:
         mode = (f"streamed max_items={self.max_items}" if self.streamed
                 else "monolithic")
-        return (f"{self.backend} [{mode}] chunks={self.chunks} "
-                f"items={self.items} "
+        return (f"{self.backend} [{mode} emit={self.emit}] "
+                f"chunks={self.chunks} items={self.items} "
                 f"peak_plan_bytes={self.peak_plan_bytes} "
                 f"(monolithic {self.monolithic_plan_bytes}) "
+                f"plan_upload_bytes={self.plan_upload_bytes} "
                 f"chunk_max_over_mean={self.chunk_max_over_mean:.3f} "
                 f"step_compiles={self.step_compiles}")
 
@@ -177,12 +285,17 @@ class CensusEngine:
     ``run_plan`` the execution record is available as :attr:`stats`.
     """
 
-    def __init__(self, mesh: Mesh | None = None, backend: str = "jnp"):
+    def __init__(self, mesh: Mesh | None = None, backend: str = "jnp",
+                 emit: str = "device"):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
+        if emit not in EMIT_MODES:
+            raise ValueError(
+                f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
         self.mesh = mesh
         self.backend = backend
+        self.emit = emit
         self.stats: EngineStats | None = None
 
     @property
@@ -212,7 +325,8 @@ class CensusEngine:
             items=plan.num_items,
             chunk_items=[plan.num_items] if plan.num_items else [],
             peak_plan_bytes=ITEM_BYTES * wp,
-            monolithic_plan_bytes=ITEM_BYTES * wp)
+            monolithic_plan_bytes=ITEM_BYTES * wp,
+            emit="host", plan_upload_bytes=ITEM_BYTES * wp)
 
     # ------------------------------------------------------------- running
     def run_plan(self, plan: CensusPlan) -> np.ndarray:
@@ -246,14 +360,29 @@ class CensusEngine:
 
     def run(self, g: CompactDigraph, *, max_items: int | None = None,
             orient: str = "none", prune_self: bool = True,
-            progress=None) -> np.ndarray:
+            progress=None, emit: str | None = None) -> np.ndarray:
         """Plan + count ``g`` end to end.
 
-        ``max_items=None`` builds one monolithic plan (O(W) host memory);
+        ``max_items=None`` covers the whole item space in one dispatch;
         an integer budget streams bounded chunks instead (O(max_items)).
+        ``emit`` (default: the engine's mode) picks the work-item path:
+        ``"device"`` ships O(pairs) descriptors per chunk and expands
+        pairs→items in-kernel; ``"host"`` materializes, packs and uploads
+        every O(W) item in numpy (the oracle).  Both are bit-identical on
+        every backend and orient mode.
         ``progress(chunk_index, num_chunks, chunk_valid_items)`` is called
-        as each chunk is dispatched.
+        per chunk — at dispatch under host emission, when the chunk's
+        device-counted valid items land under device emission.
         """
+        emit = self.emit if emit is None else emit
+        if emit not in EMIT_MODES:
+            raise ValueError(
+                f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        if emit == "device":
+            chunker = PlanChunker(g, max_items, orient=orient,
+                                  pad_to=self.ndev, prune_self=prune_self)
+            return self._run_stream_desc(chunker, progress,
+                                         max_items=max_items)
         if max_items is None:
             plan = build_plan(g, pad_to=self.ndev, orient=orient,
                               prune_self=prune_self)
@@ -263,12 +392,12 @@ class CensusEngine:
         return self._run_stream(chunker, progress)
 
     def session(self, g: CompactDigraph, *, orient: str = "none",
-                prune_self: bool = True,
-                max_items: int | None = None) -> "EngineSession":
+                prune_self: bool = True, max_items: int | None = None,
+                emit: str | None = None) -> "EngineSession":
         """Open a resident-graph session on ``g`` for repeated / sliding-
         window censuses (see :class:`EngineSession`)."""
         return EngineSession(self, g, orient=orient, prune_self=prune_self,
-                             max_items=max_items)
+                             max_items=max_items, emit=emit)
 
     def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
         space = chunker.space
@@ -276,7 +405,9 @@ class CensusEngine:
             backend=self.backend, ndev=self.ndev, orient=space.orient,
             streamed=True, max_items=chunker.max_items,
             chunks=chunker.num_chunks, chunk_shape=chunker.chunk_shape,
-            items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape)
+            items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape,
+            emit="host",
+            plan_upload_bytes=ITEM_BYTES * chunker.chunk_shape)
         if chunker.num_chunks == 0:
             return assemble_counts(space.n, 0, 0, np.zeros(64, np.int64),
                                    np.zeros(2, np.int64))
@@ -328,6 +459,76 @@ class CensusEngine:
         return assemble_counts(space.n, base_asym, base_mut,
                                hist_acc, inter_acc)
 
+    def _run_stream_desc(self, chunker: PlanChunker, progress,
+                         max_items: int | None) -> np.ndarray:
+        """Device-emission stream: per chunk the host ships the O(pairs)
+        descriptor window; the device expands pairs→items in-kernel
+        against the resident flat-index array.  Bit-identical to
+        :meth:`_run_stream` — the expanded pre-prune items carry the
+        plan-time pruning as an in-kernel mask, and every masked item is
+        provably a zero contribution (see
+        :func:`repro.core.census.prune_keep_mask`)."""
+        space = chunker.space
+        upload = (DESC_BYTES * chunker.desc_shape
+                  + 4 * chunker.num_anchors + 4)
+        self.stats = EngineStats(
+            backend=self.backend, ndev=self.ndev, orient=space.orient,
+            streamed=max_items is not None, max_items=max_items,
+            chunks=chunker.num_chunks, chunk_shape=chunker.chunk_shape,
+            items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape,
+            emit="device", desc_shape=chunker.desc_shape,
+            plan_upload_bytes=upload)
+        if chunker.num_chunks == 0:
+            return assemble_counts(space.n, 0, 0, np.zeros(64, np.int64),
+                                   np.zeros(2, np.int64))
+
+        rep, item_sh = self._shardings()
+        graph_dev = tuple(self._put(a, rep)
+                          for a in chunker.device_arrays())
+        # the flat item-index space: created on device once, reused by
+        # every chunk (this is the array the mesh shards — there are no
+        # item arrays left to shard)
+        idx_dev = self._put(jnp.arange(chunker.chunk_shape, dtype=jnp.int32),
+                            item_sh)
+
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        base_asym = base_mut = 0
+        chunk_items: list[int] = []
+        cache0 = _jit_cache_size(_desc_step)
+        pending = None
+
+        def land(fut, k):
+            num = _land_desc_partials(fut, hist_acc, inter_acc,
+                                      chunk_items)
+            if progress is not None:
+                progress(k, chunker.num_chunks, num)
+
+        for k in range(chunker.num_chunks):
+            ba, bm = chunker.bases(k)
+            base_asym += ba
+            base_mut += bm
+            win = chunker.descriptors(k)
+            words = self._put(win.device_words(), rep)
+            fut = _desc_step(*graph_dev, words, idx_dev,
+                             self.mesh, space.search_iters,
+                             chunker.desc_iters, self.backend,
+                             space.orient, space.prune_self)
+            if pending is not None:
+                land(pending, k - 1)
+            pending = fut
+        if pending is not None:
+            land(pending, chunker.num_chunks - 1)
+
+        st = self.stats
+        st.step_compiles = _jit_cache_size(_desc_step) - cache0
+        st.chunk_items = chunk_items
+        st.items = int(sum(chunk_items))
+        mono_wp = -(-st.items // self.ndev) * self.ndev
+        st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
+        return assemble_counts(space.n, base_asym, base_mut,
+                               hist_acc, inter_acc)
+
 
 def _pad_i32(a: np.ndarray, cap: int) -> np.ndarray:
     """Zero-pad an int32 array to a fixed capacity (device shape)."""
@@ -368,16 +569,31 @@ class EngineSession:
     operation :attr:`stats` (also mirrored to ``engine.stats``) records
     the dispatch schedule, including ``full_items`` — what a from-scratch
     recompute would have processed — and ``affected_pairs``.
+
+    Under ``emit="device"`` (the default) nothing above changes
+    semantically, but per dispatch the host uploads ONE packed
+    descriptor buffer (O(pairs-in-window) words) instead of the packed
+    items, and a delta update uploads only the touched pairs'
+    descriptors.  The descriptor capacity and anchor geometry are fixed
+    at session open — windows that would overflow shrink their item span
+    instead — so device emission adds no recompile vector;
+    graph-capacity growth remains the only one and is counted apart as
+    ``stats.capacity_recompiles``.
     """
 
     def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
                  orient: str = "none", prune_self: bool = True,
-                 max_items: int | None = None):
+                 max_items: int | None = None, emit: str | None = None):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
+        emit = engine.emit if emit is None else emit
+        if emit not in EMIT_MODES:
+            raise ValueError(
+                f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
         self.engine = engine
         self.orient = orient
         self.prune_self = prune_self
+        self.emit = emit
         self.n = g.n
         self.max_items = max_items
         #: pinned unrolled-search depth: any row has < n entries, so this
@@ -387,11 +603,15 @@ class EngineSession:
         self._step = _chunk_step(engine.mesh)
         self._cap_entries = 0
         self._cap_pairs = 0
+        self._capacity_grew = False
         self.chunk_shape: int | None = None
+        self.desc_shape: int | None = None
         self._census: np.ndarray | None = None
         self.last_delta: GraphDelta | None = None
         self.stats: EngineStats | None = None
         self._install(g)
+        if self.emit == "device":
+            self._init_device_emission()
 
     # ------------------------------------------------------------ state
     @property
@@ -414,6 +634,26 @@ class EngineSession:
             cap *= 2
         return cap
 
+    def _init_device_emission(self) -> None:
+        """Fix the session's descriptor geometry: a per-dispatch
+        descriptor capacity sized to the initial graph's schedule (with
+        2x headroom for sparser affected-pair subsets, capped at the
+        structural bound of chunk_shape/2 + 1 pairs per window — every
+        pair spans >= 2 pre-prune items), the matching pinned lower-bound
+        depth, and the resident flat-index array the windows expand
+        against.  Windows that would overflow the capacity shrink their
+        item span instead (:func:`repro.core.planner
+        .iter_descriptor_windows`), so no graph revision or delta can
+        ever force a descriptor-shape recompile."""
+        space = self._space
+        cs = self.chunk_shape
+        need = max_pairs_per_window(space.offsets, cs)
+        self.desc_shape = min(cs // 2 + 1, max(64, 2 * need))
+        self.desc_iters = DESC_SEARCH_ITERS
+        self.num_anchors = num_desc_anchors(cs)
+        self._idx = self.engine._put(
+            jnp.arange(cs, dtype=jnp.int32), self._item_sh)
+
     def _install(self, g: CompactDigraph) -> None:
         """Make ``g`` the resident graph: rebuild the pair space and
         (re)upload the padded device arrays."""
@@ -427,9 +667,19 @@ class EngineSession:
                       else max(space.num_items_preprune, 1))
             self.chunk_shape = -(-max(int(budget), 1)
                                  // self.engine.ndev) * self.engine.ndev
+            if self.chunk_shape >= 2**31:
+                raise ValueError(
+                    "chunk exceeds int32 item indexing; pass a smaller "
+                    "max_items budget")
+        prev_caps = (self._cap_entries, self._cap_pairs)
         self._cap_entries = self._grown(self._cap_entries,
                                         space.packed.shape[0])
         self._cap_pairs = self._grown(self._cap_pairs, space.num_pairs)
+        if prev_caps != (0, 0) and \
+                prev_caps != (self._cap_entries, self._cap_pairs):
+            # the padded device shapes changed: the next dispatch's fresh
+            # compile (if any) is a capacity recompile, not a step compile
+            self._capacity_grew = True
         put = self.engine._put
         self._dev = (
             put(space.indptr.astype(np.int32), self._rep),
@@ -482,6 +732,36 @@ class EngineSession:
             inter_acc += np.asarray(pending[1], dtype=np.int64)
         return hist_acc, inter_acc, chunk_items
 
+    def _run_desc_batches(self, windows
+                          ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+        """Device-emission twin of :meth:`_run_batches`: dispatch
+        descriptor windows against the resident graph + flat-index
+        arrays, overlapping window k+1's (tiny) descriptor build + upload
+        with window k's compute.  Valid-item counts come back from the
+        device (``inter`` lane 2), so the stats stay comparable with host
+        emission without materializing a single item."""
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        chunk_items: list[int] = []
+        put = self.engine._put
+        pending = None
+        for win in windows:
+            if win.num_preprune == 0:
+                continue
+            words = put(win.device_words(), self._rep)
+            fut = _desc_step(*self._dev, words, self._idx,
+                             self.engine.mesh, self.search_iters,
+                             self.desc_iters, self.engine.backend,
+                             self.orient, self.prune_self)
+            if pending is not None:
+                _land_desc_partials(pending, hist_acc, inter_acc,
+                                    chunk_items)
+            pending = fut
+        if pending is not None:
+            _land_desc_partials(pending, hist_acc, inter_acc,
+                                chunk_items)
+        return hist_acc, inter_acc, chunk_items
+
     def _slices(self, item_pair, item_slot, item_side):
         """Yield materialized items in ``chunk_shape``-sized batches."""
         cs = self.chunk_shape
@@ -492,9 +772,19 @@ class EngineSession:
     def _subset(self, pair_ids: np.ndarray
                 ) -> tuple[np.ndarray, int, list[int]]:
         """Contribution of a pair subset of the RESIDENT graph.  Host
-        memory is O(subset items) — bounded by the affected neighborhoods
-        in the incremental path, not by the graph's full W."""
+        memory is O(subset items) under host emission and O(subset pairs)
+        under device emission — bounded by the affected neighborhoods in
+        the incremental path, not by the graph's full W."""
         base_asym, base_mut = base_for_pairs(self._space, pair_ids)
+        if self.emit == "device":
+            ids = np.asarray(pair_ids, dtype=np.int64).ravel()
+            hist, inter, chunk_items = self._run_desc_batches(
+                subset_descriptor_windows(self._space, ids,
+                                          self.chunk_shape,
+                                          self.desc_shape,
+                                          self.num_anchors))
+            return (contribution_counts(base_asym, base_mut, hist, inter),
+                    int(sum(chunk_items)), chunk_items)
         items = emit_items_for_pairs(self._space, pair_ids)
         num_items = int(items[0].shape[0])
         if num_items == 0:
@@ -513,10 +803,22 @@ class EngineSession:
             self._full_items = self._space.num_items_postprune()
         return self._full_items
 
+    def _cache_size(self) -> int:
+        """Compile counter of the jitted step this session dispatches
+        through (the descriptor step under device emission)."""
+        return _jit_cache_size(
+            _desc_step if self.emit == "device" else self._step)
+
     def _set_stats(self, chunk_items: list[int], items: int,
                    full_items: int, affected_pairs: int,
                    compiles: int) -> None:
         ndev = self.engine.ndev
+        capacity_recompiles = 0
+        if self._capacity_grew and chunk_items:
+            # first dispatches on the regrown buffers: any fresh compile
+            # they forced is the capacity's fault, not the step's
+            capacity_recompiles, compiles = compiles, 0
+            self._capacity_grew = False
         self.stats = EngineStats(
             backend=self.engine.backend, ndev=ndev, orient=self.orient,
             streamed=True, max_items=self.max_items,
@@ -526,21 +828,36 @@ class EngineSession:
             monolithic_plan_bytes=ITEM_BYTES
             * (-(-full_items // ndev) * ndev),
             step_compiles=compiles,
-            full_items=full_items, affected_pairs=affected_pairs)
+            full_items=full_items, affected_pairs=affected_pairs,
+            emit=self.emit,
+            desc_shape=self.desc_shape or 0,
+            plan_upload_bytes=(
+                DESC_BYTES * self.desc_shape + 4 * self.num_anchors + 4
+                if self.emit == "device"
+                else ITEM_BYTES * self.chunk_shape),
+            capacity_recompiles=capacity_recompiles)
         self.engine.stats = self.stats
 
     def census(self) -> np.ndarray:
         """Full census of the resident graph; (re)bases the session's
-        running C_k that :meth:`update` moves forward.  Items are emitted
-        per pre-prune slice of ``chunk_shape``, so host plan memory stays
-        O(chunk_shape) like the streamed engine — never O(W)."""
+        running C_k that :meth:`update` moves forward.  Under host
+        emission items are emitted per pre-prune slice of ``chunk_shape``
+        (host plan memory O(chunk_shape), never O(W)); under device
+        emission only descriptor windows are built — O(pairs-per-window)
+        host memory and upload."""
         space = self._space
-        cache0 = _jit_cache_size(self._step)
+        cache0 = self._cache_size()
         w0 = space.num_items_preprune
         cs = self.chunk_shape
-        batches = (emit_items(space, lo, min(lo + cs, w0))
-                   for lo in range(0, w0, cs))
-        hist, inter, chunk_items = self._run_batches(batches)
+        if self.emit == "device":
+            hist, inter, chunk_items = self._run_desc_batches(
+                iter_descriptor_windows(space.offsets, cs,
+                                        self.desc_shape,
+                                        self.num_anchors))
+        else:
+            batches = (emit_items(space, lo, min(lo + cs, w0))
+                       for lo in range(0, w0, cs))
+            hist, inter, chunk_items = self._run_batches(batches)
         base_asym, base_mut = global_bases(space)
         self._census = assemble_counts(self.n, base_asym, base_mut,
                                        hist, inter)
@@ -548,7 +865,7 @@ class EngineSession:
         self._full_items = num_items      # the full census just counted it
         self._set_stats(chunk_items, num_items, num_items,
                         space.num_pairs,
-                        _jit_cache_size(self._step) - cache0)
+                        self._cache_size() - cache0)
         return self._census.copy()
 
     def update(self, add_src=None, add_dst=None,
@@ -559,13 +876,15 @@ class EngineSession:
         if self._census is None:
             raise RuntimeError(
                 "no baseline census: call census() before update()")
-        cache0 = _jit_cache_size(self._step)
+        cache0 = self._cache_size()
         g_new, delta = apply_delta(self._g, add_src, add_dst,
                                    del_src, del_dst)
         self.last_delta = delta
         if delta.num_changed == 0:
+            # nothing changed: no recount, no descriptor/item upload, no
+            # device dispatch — the running census is already the answer
             self._set_stats([], 0, self._postprune_items(), 0,
-                            _jit_cache_size(self._step) - cache0)
+                            self._cache_size() - cache0)
             return self._census.copy()
 
         aff_old = affected_pair_ids(self._space, delta.touched)
@@ -578,5 +897,5 @@ class EngineSession:
         self._set_stats(chunks_old + chunks_new, items_old + items_new,
                         self._postprune_items(),
                         int(aff_old.shape[0] + aff_new.shape[0]),
-                        _jit_cache_size(self._step) - cache0)
+                        self._cache_size() - cache0)
         return self._census.copy()

@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.core.digraph import GraphDelta
 from repro.core.planner import (
-    PairSpace, base_for_pairs, emit_items_for_pairs)
+    PairSpace, base_for_pairs, emit_items_for_pairs,
+    iter_descriptor_windows)
 from repro.core.tricode import FOLD_64_TO_16
 
 #: runner signature: (item_pair, item_slot, item_side) -> (hist64, inter)
@@ -93,6 +94,28 @@ def subset_contribution(space: PairSpace, pair_ids: np.ndarray,
         hist64, inter = run_items(item_pair, item_slot, item_side)
     return contribution_counts(base_asym, base_mut, hist64, inter), \
         num_items
+
+
+def subset_descriptor_windows(space: PairSpace, pair_ids: np.ndarray,
+                              max_items: int, desc_shape: int,
+                              num_anchors: int):
+    """Descriptor windows covering an arbitrary pair subset's item space —
+    the device-emission counterpart of :func:`emit_items_for_pairs`.
+
+    A delta update that routes its affected pairs through these windows
+    uploads O(affected pairs) descriptor words per window instead of the
+    subset's O(items) packed work items; the device expands and prunes in
+    place (:func:`repro.core.census.census_partials_desc`), so the
+    incremental path's host→device traffic shrinks with the same delta
+    algebra and bit-identical results.
+    """
+    ids = np.asarray(pair_ids, dtype=np.int64).ravel()
+    if ids.size and (ids.min() < 0 or ids.max() >= space.num_pairs):
+        raise ValueError(f"pair id outside [0, {space.num_pairs})")
+    offsets = np.zeros(ids.shape[0] + 1, dtype=np.int64)
+    np.cumsum(space.counts[ids], out=offsets[1:])
+    yield from iter_descriptor_windows(offsets, max_items, desc_shape,
+                                       num_anchors, pair_ids=ids)
 
 
 def combine(census_old: np.ndarray, contrib_old: np.ndarray,

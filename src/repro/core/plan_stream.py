@@ -36,7 +36,9 @@ import numpy as np
 
 from repro.core.digraph import CompactDigraph
 from repro.core.planner import (
-    PairSpace, emit_items, pad_and_pack, pair_space)
+    DESC_SEARCH_ITERS, DescriptorWindow, PairSpace, descriptor_window,
+    emit_items, max_pairs_per_window, num_desc_anchors, pad_and_pack,
+    pair_space)
 
 
 @dataclass(frozen=True)
@@ -69,26 +71,43 @@ class PlanChunker:
     ``prune_self`` match :func:`repro.core.planner.build_plan`.
     """
 
-    def __init__(self, g: CompactDigraph, max_items: int,
+    def __init__(self, g: CompactDigraph, max_items: int | None,
                  orient: str = "none", pad_to: int = 1,
                  prune_self: bool = True):
-        if max_items < 1:
+        if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
         if pad_to < 1:
             raise ValueError(f"pad_to must be >= 1, got {pad_to}")
         self.space: PairSpace = pair_space(g, orient=orient,
                                            prune_self=prune_self)
-        self.max_items = int(max_items)
-        self.pad_to = int(pad_to)
         w_pre = self.space.num_items_preprune
+        #: ``max_items=None`` covers the whole item space as one chunk —
+        #: the monolithic schedule expressed in chunker terms (used by the
+        #: device-emission path, which has no separate monolithic driver)
+        self.max_items = int(max_items) if max_items is not None \
+            else max(w_pre, 1)
+        self.pad_to = int(pad_to)
         self.num_chunks = -(-w_pre // self.max_items) if w_pre else 0
         #: fixed padded per-chunk item-array length (compile-once shape);
         #: clamped to the actual work when the budget exceeds it
         span = min(self.max_items, max(w_pre, 1))
         self.chunk_shape = -(-span // self.pad_to) * self.pad_to
+        if self.chunk_shape >= 2**31:
+            raise ValueError(
+                "chunk exceeds int32 item indexing; pass a smaller "
+                "max_items budget")
         starts = np.arange(self.num_chunks, dtype=np.int64) * self.max_items
         self._starts = starts
         self._base_asym, self._base_mut = self.space.base_slices(starts)
+        # descriptor-space view of the same schedule: the fixed desc_shape
+        # is the widest per-chunk pair span, so every chunk's descriptor
+        # arrays share one shape
+        self.desc_shape = max_pairs_per_window(self.space.offsets,
+                                               self.max_items)
+        #: unrolled lower-bound depth per lane — a constant, thanks to
+        #: the anchored search (see planner.DESC_ANCHOR_STRIDE)
+        self.desc_iters = DESC_SEARCH_ITERS
+        self.num_anchors = num_desc_anchors(self.chunk_shape)
 
     def __len__(self) -> int:
         return self.num_chunks
@@ -121,6 +140,23 @@ class PlanChunker:
             num_items=num_items, item_sp=item_sp, item_pv=item_pv,
             base_asym=int(self._base_asym[k]),
             base_mut=int(self._base_mut[k]))
+
+    def descriptors(self, k: int) -> DescriptorWindow:
+        """Chunk ``k`` as a pair-descriptor window (O(pairs-in-chunk)
+        memory, no item materialization) — what the device-emission path
+        ships instead of :meth:`chunk`'s packed items.  Intra-pair splits
+        surface as the window's ``desc_within0`` offsets."""
+        if not 0 <= k < self.num_chunks:
+            raise IndexError(f"chunk {k} out of range "
+                             f"[0, {self.num_chunks})")
+        lo = int(self._starts[k])
+        hi = min(lo + self.max_items, self.space.num_items_preprune)
+        return descriptor_window(self.space.offsets, lo, hi,
+                                 self.desc_shape, self.num_anchors)
+
+    def bases(self, k: int) -> tuple[int, int]:
+        """Chunk ``k``'s additive (base_asym, base_mut) share."""
+        return int(self._base_asym[k]), int(self._base_mut[k])
 
     def __iter__(self) -> Iterator[PlanChunk]:
         for k in range(self.num_chunks):

@@ -20,6 +20,11 @@ materialized at once:
   :func:`base_for_pairs` gives the matching subset-additive closed-form
   bases — the pieces the incremental census
   (:mod:`repro.core.incremental`) diffs affected pairs with.
+* :func:`descriptor_window` compresses any window of the item space into
+  O(pairs) *descriptors* (:class:`DescriptorWindow`) from which the
+  device expands items itself
+  (:func:`repro.core.census.expand_work_items`) — the ``emit="device"``
+  path that avoids materializing items on the host at all.
 
 :func:`build_plan` is the one-slice special case (``[0, W)``);
 :mod:`repro.core.plan_stream` iterates bounded slices for out-of-core
@@ -302,6 +307,162 @@ def emit_items_for_pairs(space: PairSpace, pair_ids
     starts = np.cumsum(counts) - counts
     within = np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
     return _materialize_items(space, item_pair, within)
+
+
+#: bytes per pair descriptor shipped by the device-emission path: three
+#: int32 words (pair id, window-local cumulative offset, within-pair start)
+DESC_BYTES = 12
+
+#: padding value for ``desc_cum`` — larger than any window-local item
+#: index, so the in-kernel lower-bound search never lands on a padding
+#: descriptor (mirrors census_fused.PACKED_PAD for the CSR array)
+DESC_CUM_PAD = 2**31 - 1
+
+#: anchor-table stride for the in-kernel item→descriptor lookup: one
+#: precomputed anchor per ``DESC_ANCHOR_STRIDE`` flat items narrows the
+#: per-lane lower-bound search from the whole descriptor table to the
+#: <= stride/2 + 1 descriptors that can overlap one stride span (every
+#: pair spans >= 2 pre-prune items), making the unrolled search depth a
+#: small CONSTANT independent of the window's pair count
+DESC_ANCHOR_STRIDE = 16
+
+#: unrolled lower-bound depth sufficient for any anchored search range
+DESC_SEARCH_ITERS = int(np.ceil(np.log2(DESC_ANCHOR_STRIDE // 2 + 2)))
+
+
+def num_desc_anchors(chunk_shape: int) -> int:
+    """Fixed anchor-table length for a ``chunk_shape``-lane window (the
+    +2 covers the partial trailing stride and the closing bound)."""
+    return int(chunk_shape) // DESC_ANCHOR_STRIDE + 2
+
+
+def max_pairs_per_window(offsets: np.ndarray, window: int) -> int:
+    """Widest pair span of any chunk in the equal-``window`` slicing of
+    an item space — the one boundary convention (searchsorted right/left
+    over the prefix ``offsets``) shared by every descriptor-shape sizing
+    decision, so producers and :func:`descriptor_window` can never
+    disagree about how many descriptors a window may need."""
+    offsets = np.asarray(offsets, dtype=np.int64)
+    total = int(offsets[-1])
+    if total == 0 or offsets.shape[0] <= 1:
+        return 1
+    starts = np.arange(0, total, int(window), dtype=np.int64)
+    stops = np.minimum(starts + int(window), total)
+    p0 = np.searchsorted(offsets, starts, side="right") - 1
+    p1 = np.searchsorted(offsets, stops, side="left")
+    return max(int((p1 - p0).max()), 1)
+
+
+@dataclass(frozen=True)
+class DescriptorWindow:
+    """Compact per-pair descriptors for one window of an item space.
+
+    This is what the device-emission path ships instead of materialized
+    work items: O(pairs-in-window) descriptors from which the device
+    expands every flat item index ``i`` in ``[0, num_preprune)`` back to
+    its ``(pair, slot, side)`` coordinates arithmetically
+    (:func:`repro.core.census.expand_work_items`).  ``desc_cum[j]`` is the
+    window-local index of descriptor j's first item (a cumulative-offset
+    table the kernel binary-searches); ``desc_within0[j]`` is the
+    within-pair position of that first item — non-zero only when the
+    window starts mid-pair (an intra-pair split expressed as an offset,
+    never as materialized items).  Arrays are padded to a fixed
+    ``desc_shape`` so the jitted device step compiles once.
+    """
+
+    start: int                 #: window [start, stop) in its item space
+    stop: int
+    num_preprune: int          #: stop - start (valid expansion lanes)
+    num_descs: int             #: live descriptors before padding
+    desc_pair: np.ndarray      #: (desc_shape,) int32 pair ids, pad 0
+    desc_cum: np.ndarray       #: (desc_shape,) int32, pad DESC_CUM_PAD
+    desc_within0: np.ndarray   #: (desc_shape,) int32, pad 0
+    anchors: np.ndarray        #: (num_anchors,) int32 item→desc anchors
+
+    @property
+    def upload_bytes(self) -> int:
+        """Host→device plan bytes this window ships (padded descriptor
+        arrays + anchor table + the 4-byte valid-lane count)."""
+        return (DESC_BYTES * int(self.desc_pair.shape[0])
+                + 4 * int(self.anchors.shape[0]) + 4)
+
+    def device_words(self) -> np.ndarray:
+        """The window as ONE int32 buffer — ``[num_preprune, desc_pair…,
+        desc_cum…, desc_within0…, anchors…]`` — so each chunk costs a
+        single host→device upload; the jitted step slices the fields back
+        apart (their lengths are static, recoverable from the buffer and
+        item-lane counts)."""
+        return np.concatenate([
+            np.array([self.num_preprune], dtype=np.int32),
+            self.desc_pair, self.desc_cum, self.desc_within0,
+            self.anchors])
+
+
+def descriptor_window(offsets: np.ndarray, lo: int, hi: int,
+                      desc_shape: int, num_anchors: int,
+                      pair_ids=None) -> DescriptorWindow:
+    """Build the descriptors of item window ``[lo, hi)``.
+
+    ``offsets`` is the (K+1,) pre-prune prefix over a pair sequence —
+    :attr:`PairSpace.offsets` for the global space (``pair_ids=None``:
+    descriptor j's pair id is its absolute index), or a subset prefix with
+    ``pair_ids`` giving the actual pair ids (the incremental path).
+    ``num_anchors`` fixes the anchor-table shape
+    (:func:`num_desc_anchors` of the dispatch lane count).
+    O(pairs-in-window + num_anchors) time and memory; boundaries may fall
+    mid-pair.
+    """
+    offsets = np.asarray(offsets, dtype=np.int64)
+    lo, hi = int(lo), int(hi)
+    if not (0 <= lo <= hi <= int(offsets[-1])):
+        raise ValueError(f"window [{lo}, {hi}) outside item space "
+                         f"[0, {int(offsets[-1])})")
+    j0 = int(np.searchsorted(offsets, lo, side="right") - 1) if hi > lo \
+        else 0
+    j1 = int(np.searchsorted(offsets, hi, side="left")) if hi > lo else 0
+    nd = j1 - j0
+    if nd > desc_shape:
+        raise ValueError(f"window [{lo}, {hi}) spans {nd} pairs "
+                         f"> desc_shape {desc_shape}")
+    dp = np.zeros(desc_shape, dtype=np.int32)
+    dc = np.full(desc_shape, DESC_CUM_PAD, dtype=np.int32)
+    dw = np.zeros(desc_shape, dtype=np.int32)
+    anchors = np.zeros(num_anchors, dtype=np.int32)
+    if nd:
+        ids = (np.arange(j0, j1, dtype=np.int64) if pair_ids is None
+               else np.asarray(pair_ids, dtype=np.int64)[j0:j1])
+        starts = offsets[j0:j1]
+        dp[:nd] = ids
+        cum = np.maximum(starts - lo, 0)
+        dc[:nd] = cum
+        dw[:nd] = np.maximum(lo - starts, 0)
+        grid = (np.arange(num_anchors, dtype=np.int64)
+                * DESC_ANCHOR_STRIDE)
+        anchors[:] = np.clip(
+            np.searchsorted(cum, grid, side="right") - 1, 0, nd - 1)
+    return DescriptorWindow(start=lo, stop=hi, num_preprune=hi - lo,
+                            num_descs=nd, desc_pair=dp, desc_cum=dc,
+                            desc_within0=dw, anchors=anchors)
+
+
+def iter_descriptor_windows(offsets: np.ndarray, max_items: int,
+                            desc_shape: int, num_anchors: int,
+                            pair_ids=None):
+    """Cover an item space with descriptor windows of at most ``max_items``
+    items AND at most ``desc_shape`` pairs each (a window over many small
+    pairs shrinks its item span instead of overflowing the fixed-shape
+    descriptor buffers — compile-once without capacity growth)."""
+    offsets = np.asarray(offsets, dtype=np.int64)
+    total = int(offsets[-1])
+    num_pairs = offsets.shape[0] - 1
+    lo = 0
+    while lo < total:
+        j0 = int(np.searchsorted(offsets, lo, side="right") - 1)
+        hi = min(lo + int(max_items), total,
+                 int(offsets[min(j0 + int(desc_shape), num_pairs)]))
+        yield descriptor_window(offsets, lo, hi, desc_shape, num_anchors,
+                                pair_ids=pair_ids)
+        lo = hi
 
 
 def base_for_pairs(space: PairSpace, pair_ids) -> tuple[int, int]:

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.engine import CensusEngine, EngineStats
+from repro.core.engine import CensusEngine, EMIT_MODES, EngineStats
 from repro.core.tricode import TRIAD_NAMES
 
 #: Paper Fig 3: triad patterns relevant to computer-network monitoring.
@@ -95,6 +95,10 @@ class TriadMonitor:
         through one resident :class:`~repro.core.engine.EngineSession`.
     incremental : delta-update overlapping windows instead of recomputing
         them from scratch (bit-identical either way).
+    emit : work-item emission mode for every window census and delta
+        update (``None`` — the engine default, ``"device"`` — stream
+        O(affected pairs) descriptors and expand in-kernel, ``"host"`` —
+        materialize items in numpy; bit-identical either way).
     """
 
     def __init__(self, n_nodes: int, window: int = 1000,
@@ -102,7 +106,8 @@ class TriadMonitor:
                  stride: int | None = None, backend: str = "jnp",
                  mesh=None, orient: str = "none",
                  incremental: bool = True,
-                 max_items: int | None = None):
+                 max_items: int | None = None,
+                 emit: str | None = None):
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
         if window < 1:
@@ -118,9 +123,13 @@ class TriadMonitor:
         self.stride = stride
         self.history = int(history)
         self.threshold = float(threshold)
+        if emit is not None and emit not in EMIT_MODES:
+            raise ValueError(
+                f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
         self.incremental = bool(incremental)
         self.orient = orient
         self.max_items = max_items
+        self.emit = emit
         self.engine = CensusEngine(mesh=mesh, backend=backend)
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
@@ -182,7 +191,8 @@ class TriadMonitor:
         g = from_edges(arcs // n, arcs % n, n=n)
         if self._session is None:
             self._session = self.engine.session(
-                g, orient=self.orient, max_items=self.max_items)
+                g, orient=self.orient, max_items=self.max_items,
+                emit=self.emit)
         else:
             self._session.set_graph(g)
         census = self._session.census()

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.planner import DESC_CUM_PAD
+
 #: Work-item block geometry per grid step: (ROWS, 128) packed words.
 ROWS = 64
 LANES = 128
@@ -36,6 +38,31 @@ BLOCK_ITEMS = ROWS * LANES
 #: Sentinel padding for the packed CSR array: larger than any real entry,
 #: keeps padded tails sorted and un-matchable ((sentinel >> 2) != any id).
 PACKED_PAD = 2**31 - 1
+
+
+def _accumulate_block(out_ref, tricode, count_mask, inter_mask, is_mut,
+                      keep_mask=None):
+    """Fold one item block's classifications into the VMEM-resident
+    (8, 128) output: row 0 = hist64, row 1 lanes 0/1 = intersection
+    counters (+ lane 2 = pruning-predicate keep count when given) — all
+    vector-shaped updates."""
+    # one-hot fold: masked items get tricode 64, outside the one-hot range
+    tricode = jnp.where(count_mask, tricode, 64)
+    cls = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ITEMS, 64), 1)
+    counts = jnp.sum((tricode[:, None] == cls).astype(jnp.int32), axis=0)
+    inter_a = jnp.sum((inter_mask & ~is_mut).astype(jnp.int32))
+    inter_m = jnp.sum((inter_mask & is_mut).astype(jnp.int32))
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (8, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (8, LANES), 1)
+    counts128 = jnp.concatenate([counts, jnp.zeros(64, jnp.int32)])
+    block = jnp.where(row == 0, counts128[None, :], 0)
+    block = block + jnp.where((row == 1) & (lane == 0), inter_a, 0)
+    block = block + jnp.where((row == 1) & (lane == 1), inter_m, 0)
+    if keep_mask is not None:
+        kept = jnp.sum(keep_mask.astype(jnp.int32))
+        block = block + jnp.where((row == 1) & (lane == 2), kept, 0)
+    out_ref[...] += block
 
 
 def _kernel(ip_ref, pk_ref, pu_ref, pv_ref, pc_ref, sp_ref, pw_ref,
@@ -66,23 +93,47 @@ def _kernel(ip_ref, pk_ref, pu_ref, pv_ref, pc_ref, sp_ref, pw_ref,
     # implementation as the oracle backend, traced on VMEM-resident values
     tricode, count_mask, inter_mask, is_mut = classify_items(
         ip, pk, pu, pvv, pc, pair, slot, side, valid, search_iters)
+    _accumulate_block(out_ref, tricode, count_mask, inter_mask, is_mut)
 
-    # one-hot fold: masked items get tricode 64, outside the one-hot range
-    tricode = jnp.where(count_mask, tricode, 64)
-    cls = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ITEMS, 64), 1)
-    counts = jnp.sum((tricode[:, None] == cls).astype(jnp.int32), axis=0)
-    inter_a = jnp.sum((inter_mask & ~is_mut).astype(jnp.int32))
-    inter_m = jnp.sum((inter_mask & is_mut).astype(jnp.int32))
 
-    # assemble the (8, 128) partial: row 0 = hist64 (lanes 0..63),
-    # row 1 lanes 0/1 = intersection counters — all vector-shaped updates
-    row = jax.lax.broadcasted_iota(jnp.int32, (8, LANES), 0)
-    lane = jax.lax.broadcasted_iota(jnp.int32, (8, LANES), 1)
-    counts128 = jnp.concatenate([counts, jnp.zeros(64, jnp.int32)])
-    block = jnp.where(row == 0, counts128[None, :], 0)
-    block = block + jnp.where((row == 1) & (lane == 0), inter_a, 0)
-    block = block + jnp.where((row == 1) & (lane == 1), inter_m, 0)
-    out_ref[...] += block
+def _desc_kernel(ip_ref, pk_ref, pu_ref, pv_ref, pc_ref, dp_ref, dc_ref,
+                 dw_ref, an_ref, nv_ref, idx_ref, out_ref, *,
+                 num_descs: int, num_anchors: int, search_iters: int,
+                 desc_iters: int, orient: str, prune_self: bool):
+    """Device-emission variant: the item block arrives as flat *indices*
+    only; the kernel expands each index to its (pair, slot, side) from the
+    VMEM-resident descriptor window before classifying — work items never
+    exist on the host or in HBM at all."""
+    from repro.core.census import (
+        classify_items, expand_work_items, prune_keep_mask)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ip = ip_ref[...].reshape(-1)
+    pk = pk_ref[...].reshape(-1)
+    pu = pu_ref[...].reshape(-1)
+    pvv = pv_ref[...].reshape(-1)
+    pc = pc_ref[...].reshape(-1)
+    # descriptor/anchor arrays sliced back to their true (static) lengths
+    # (the anchored search geometry is defined on them, not on the
+    # lane-padded tiles)
+    dp = dp_ref[...].reshape(-1)[:num_descs]
+    dc = dc_ref[...].reshape(-1)[:num_descs]
+    dw = dw_ref[...].reshape(-1)[:num_descs]
+    an = an_ref[...].reshape(-1)[:num_anchors]
+    nv = nv_ref[...].reshape(-1)[0]
+    idx = idx_ref[...].reshape(-1)
+
+    pair, slot, side, valid = expand_work_items(
+        ip, pu, pvv, dp, dc, dw, an, nv, idx, desc_iters)
+    tricode, count_mask, inter_mask, is_mut = classify_items(
+        ip, pk, pu, pvv, pc, pair, slot, side, valid, search_iters)
+    keep = prune_keep_mask(pk, pu, pvv, pc, pair, slot, side, valid,
+                           orient, prune_self)
+    _accumulate_block(out_ref, tricode, count_mask, inter_mask, is_mut,
+                      keep_mask=keep)
 
 
 def _pad_1d_to_lanes(a: jax.Array, fill) -> jax.Array:
@@ -129,3 +180,54 @@ def census_fused_kernel(indptr, packed, pair_u, pair_v, pair_code,
         interpret=interpret,
     )(ip2, pk2, pu2, pv2, pc2, sp2, pw2)
     return out[0, :64], out[1, :2]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "search_iters", "desc_iters", "orient", "prune_self", "interpret"))
+def census_fused_desc_kernel(indptr, packed, pair_u, pair_v, pair_code,
+                             desc_pair, desc_cum, desc_within0, anchors,
+                             num_valid, idx, search_iters: int,
+                             desc_iters: int, orient: str,
+                             prune_self: bool, interpret: bool = True):
+    """Fused census partials from pair descriptors:
+    ``(hist64 (64,), inter (3,))`` int32.
+
+    ``idx`` is the flat item-index array (its length, a BLOCK_ITEMS
+    multiple, sets the grid); the descriptor window + anchor table ride
+    along as whole-array VMEM blocks like the graph arrays, and each grid
+    step expands + classifies one index block in place.  ``inter`` lane 2
+    is the count of indices the plan-time pruning predicate would keep.
+    """
+    w = idx.shape[0]
+    assert w % BLOCK_ITEMS == 0, w
+    grid = w // BLOCK_ITEMS
+
+    ip2 = _pad_1d_to_lanes(indptr, fill=indptr[-1])
+    pk2 = _pad_1d_to_lanes(packed, fill=PACKED_PAD)
+    pu2 = _pad_1d_to_lanes(pair_u, fill=0)
+    pv2 = _pad_1d_to_lanes(pair_v, fill=0)
+    pc2 = _pad_1d_to_lanes(pair_code, fill=0)
+    dp2 = _pad_1d_to_lanes(desc_pair, fill=0)
+    dc2 = _pad_1d_to_lanes(desc_cum, fill=DESC_CUM_PAD)
+    dw2 = _pad_1d_to_lanes(desc_within0, fill=0)
+    an2 = _pad_1d_to_lanes(anchors, fill=0)
+    nv2 = _pad_1d_to_lanes(num_valid, fill=0)
+    idx2 = idx.reshape(grid * ROWS, LANES)
+
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0, 0))
+    item = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_desc_kernel, num_descs=int(desc_pair.shape[0]),
+                          num_anchors=int(anchors.shape[0]),
+                          search_iters=search_iters,
+                          desc_iters=desc_iters, orient=orient,
+                          prune_self=prune_self),
+        grid=(grid,),
+        in_specs=[whole(ip2), whole(pk2), whole(pu2), whole(pv2),
+                  whole(pc2), whole(dp2), whole(dc2), whole(dw2),
+                  whole(an2), whole(nv2), item],
+        out_specs=pl.BlockSpec((8, LANES), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, LANES), jnp.int32),
+        interpret=interpret,
+    )(ip2, pk2, pu2, pv2, pc2, dp2, dc2, dw2, an2, nv2, idx2)
+    return out[0, :64], out[1, :3]

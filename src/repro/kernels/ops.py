@@ -11,11 +11,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.census_fused import census_fused_kernel
+from repro.kernels.census_fused import (
+    census_fused_desc_kernel, census_fused_kernel)
 from repro.kernels.census_fused import BLOCK_ITEMS as FUSED_BLOCK_ITEMS
 from repro.kernels.tricode_hist import (
     BLOCK_ITEMS, tricode_histogram_kernel)
 from repro.kernels.pair_codes import LANES, TILE_B, pair_codes_kernel
+
+#: padding value for the flat-index array shipped to the desc kernel:
+#: >= any possible valid-lane count (so padding lanes decode invalid) and
+#: small enough that the in-kernel ``idx + 1`` can never overflow int32
+IDX_PAD = 2**31 - 2
 
 
 def _interpret_default() -> bool:
@@ -82,6 +88,35 @@ def fused_census_partials(indptr, packed, pair_u, pair_v, pair_code,
     return census_fused_kernel(indptr, packed, pair_u, pair_v, pair_code,
                                item_sp, item_pv, search_iters,
                                interpret=interpret)
+
+
+def fused_census_desc_partials(indptr, packed, pair_u, pair_v, pair_code,
+                               desc_pair, desc_cum, desc_within0,
+                               anchors, num_valid, idx,
+                               search_iters: int, desc_iters: int,
+                               orient: str, prune_self: bool,
+                               interpret: bool | None = None):
+    """Fused device-emission census partials: ``(hist64 (64,), inter (3,))``.
+
+    Drop-in replacement for
+    :func:`repro.core.census.census_partials_desc` (backend
+    ``"pallas-fused"``): descriptor expansion, gather, binary search,
+    classification and histogram all happen inside one Pallas kernel.
+    Pads the flat-index array to the kernel block with ``IDX_PAD``, which
+    always decodes to an invalid lane.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    w = idx.shape[0]
+    pad = (-w) % FUSED_BLOCK_ITEMS
+    idx = idx.astype(jnp.int32)
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.full((pad,), IDX_PAD, jnp.int32)])
+    return census_fused_desc_kernel(
+        indptr, packed, pair_u, pair_v, pair_code, desc_pair, desc_cum,
+        desc_within0, anchors, num_valid, idx, search_iters, desc_iters,
+        orient, prune_self, interpret=interpret)
 
 
 # re-export oracles for test symmetry
