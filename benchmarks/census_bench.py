@@ -402,6 +402,120 @@ def emit_smoke(rows: list):
                          f"incr_bytes={ib_h}v{ib_d};parity=ok"))
 
 
+def partitioned_scaling(rows: list):
+    """Tentpole rows ``part_shard{1,4,8}``: partitioned multi-device
+    execution of the power-law workload — each device holds only its pair
+    shard's local subgraph and walks its own descriptor stream — vs the
+    replicated mesh baseline.  Asserts bit-identical censuses in-row and
+    reports the per-device resident graph bytes, the byte reduction over
+    replication, and the LPT shard imbalance (target ≤ 1.2)."""
+    import jax
+
+    from repro.core import CensusEngine, default_mesh
+
+    if len(jax.devices()) < 8:
+        rows.append(("part_shard_skipped", 0.0,
+                     f"needs 8 devices, have {len(jax.devices())}"))
+        return
+    g = paper_workload("patents", n=20_000, avg_degree=3.0, seed=0)
+    repl = CensusEngine(mesh=default_mesh(8), backend="jnp")
+    dt_repl, want = _timeit(repl.run, g)
+    rows.append(("part_replicated8", dt_repl * 1e6,
+                 f"graph_bytes={repl.stats.graph_resident_bytes};"
+                 f"items={repl.stats.items}"))
+    for shards in (1, 4, 8):
+        engine = CensusEngine(mesh=default_mesh(shards), backend="jnp",
+                              partition=True)
+        got = engine.run(g)
+        if not (got == want).all():
+            raise AssertionError(
+                f"partitioned census mismatch at {shards} shards")
+        dt, _ = _timeit(engine.run, g)
+        st = engine.stats
+        rows.append((
+            f"part_shard{shards}", dt * 1e6,
+            f"graph_bytes={st.graph_resident_bytes};"
+            f"replicated={st.graph_replicated_bytes};"
+            f"reduction="
+            f"{st.graph_replicated_bytes / max(st.graph_resident_bytes, 1):.2f}x;"
+            f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
+
+
+def partition_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --partition-smoke): on an 8-virtual-
+    host mesh, partitioned censuses must be bit-identical to the
+    single-device path (jnp × both emits × both orients, monolithic +
+    streamed, plus pallas-fused and an incremental partitioned session),
+    with shard item imbalance ≤ 1.2 and ≥ 2x per-device graph-byte
+    reduction on the power-law workload."""
+    import jax
+
+    from repro.core import CensusEngine, default_mesh, pair_space
+
+    if len(jax.devices()) < 8:
+        raise AssertionError(
+            f"partition smoke needs 8 devices, have {len(jax.devices())} "
+            "(run via benchmarks/run.py, which forces them)")
+    g = paper_workload("patents", n=4_000, avg_degree=3.0, seed=0)
+    want = CensusEngine(backend="jnp").run(g)
+    w_pre = pair_space(g).num_items_preprune
+    mesh = default_mesh(8)
+    for backend, emits, orients in (
+            ("jnp", ("device", "host"), ("none", "degree")),
+            ("pallas-fused", ("device",), ("none",))):
+        for emit in emits:
+            for orient in orients:
+                t0 = time.perf_counter()
+                engine = CensusEngine(mesh=mesh, backend=backend,
+                                      partition=True, emit=emit)
+                for max_items in (None, max(w_pre // 4, 1)):
+                    got = engine.run(g, max_items=max_items,
+                                     orient=orient)
+                    if not (got == want).all():
+                        raise AssertionError(
+                            f"{backend}/{emit}/{orient}: partitioned "
+                            "census != single-device")
+                st = engine.stats
+                if st.shard_max_over_mean > 1.2:
+                    raise AssertionError(
+                        f"{backend}/{emit}/{orient}: shard imbalance "
+                        f"{st.shard_max_over_mean:.3f} > 1.2")
+                if st.graph_replicated_bytes < \
+                        2 * st.graph_resident_bytes:
+                    raise AssertionError(
+                        f"{backend}/{emit}/{orient}: byte reduction "
+                        f"{st.graph_replicated_bytes}/"
+                        f"{st.graph_resident_bytes} < 2x")
+                dt = time.perf_counter() - t0
+                rows.append((
+                    f"part_smoke_{backend}_{emit}_{orient}", dt * 1e6,
+                    f"chunks={st.chunks};"
+                    f"shard_max_over_mean={st.shard_max_over_mean:.3f};"
+                    f"graph_bytes={st.graph_resident_bytes}v"
+                    f"{st.graph_replicated_bytes};parity=ok"))
+    # incremental partitioned session: delta updates must stay
+    # bit-identical to the unpartitioned session's
+    rng = np.random.default_rng(2)
+    add = (rng.integers(0, 4_000, 80), rng.integers(0, 4_000, 80))
+    rem = (rng.integers(0, 4_000, 80), rng.integers(0, 4_000, 80))
+    t0 = time.perf_counter()
+    ses = {p: CensusEngine(mesh=mesh, backend="jnp",
+                           partition=p).session(g, max_items=w_pre)
+           for p in (False, True)}
+    if not (ses[False].census() == ses[True].census()).all():
+        raise AssertionError("partitioned session census diverges")
+    got_r = ses[False].update(*add, *rem)
+    got_p = ses[True].update(*add, *rem)
+    if not (got_r == got_p).all():
+        raise AssertionError("partitioned incremental update diverges")
+    st = ses[True].stats
+    dt = time.perf_counter() - t0
+    rows.append(("part_smoke_session", dt * 1e6,
+                 f"affected_pairs={st.affected_pairs};items={st.items};"
+                 f"dispatched_shards="
+                 f"{sum(1 for x in st.shard_items if x)};parity=ok"))
+
+
 def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
                     backbone_every=2):
     """Monitoring workload: a persistent service backbone (a fixed server
@@ -528,6 +642,7 @@ def run(rows: list):
     fused_vs_reference(rows)
     streaming_vs_monolithic(rows)
     device_emission(rows)
+    partitioned_scaling(rows)
     temporal_windows(rows)
 
 

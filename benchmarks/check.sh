@@ -27,6 +27,14 @@
 # — full streamed runs and incremental session updates — while shipping
 # >= 4x fewer host→device plan bytes per chunk on both paths.
 #
+# The partition smoke (benchmarks/run.py --partition-smoke) runs the
+# partitioned engine — each device of an 8-virtual-host mesh holds only
+# its pair shard's relabeled local subgraph and walks its own descriptor
+# stream — and asserts bit-identical censuses vs the single-device path
+# (jnp × both emits × both orients, monolithic + streamed, pallas-fused,
+# and an incremental partitioned session), shard item imbalance <= 1.2,
+# and >= 2x per-device graph-byte reduction on the power-law workload.
+#
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -47,3 +55,6 @@ python -m benchmarks.run --temporal-smoke
 
 echo "== emit smoke (device == host emission, >= 4x fewer plan bytes) =="
 python -m benchmarks.run --emit-smoke
+
+echo "== partition smoke (sharded graph == single device, >= 2x fewer graph bytes) =="
+python -m benchmarks.run --partition-smoke

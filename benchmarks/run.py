@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -45,15 +46,34 @@ def main() -> None:
                     help="device-vs-host emission gate: bit-identical "
                          "censuses (full + incremental) with >= 4x fewer "
                          "host-to-device plan bytes per chunk")
+    ap.add_argument("--partition-smoke", action="store_true",
+                    help="partitioned-execution gate: bit-identity vs "
+                         "the single-device path on an 8-virtual-host "
+                         "mesh, shard imbalance <= 1.2, >= 2x per-device "
+                         "graph-byte reduction")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as machine-readable JSON "
                          "(name, us_per_call, derived, backend), e.g. "
                          "BENCH_census.json")
     args = ap.parse_args()
 
+    # the partition rows (part_shard{1,4,8} and --partition-smoke) need a
+    # multi-device mesh; force 8 virtual host devices BEFORE the first
+    # jax import, exactly like tests/conftest.py (single-device rows
+    # still execute on one device — the virtual split only adds
+    # addressable devices)
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8"
+            ).strip()
+
     rows: list = []
     from benchmarks import census_bench
-    if args.emit_smoke:
+    if args.partition_smoke:
+        census_bench.partition_smoke(rows)
+    elif args.emit_smoke:
         census_bench.emit_smoke(rows)
     elif args.temporal_smoke:
         census_bench.temporal_smoke(rows)

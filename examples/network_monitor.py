@@ -19,14 +19,18 @@ items 3-9x.)
     PYTHONPATH=src python examples/network_monitor.py
     PYTHONPATH=src python examples/network_monitor.py \
         --backend pallas-fused --stride 600 --verbose
+    PYTHONPATH=src python examples/network_monitor.py --mesh 4 --stride 600
 """
 
 import argparse
+import os
+import sys
 
 import numpy as np
 
-from repro.core import SECURITY_PATTERNS, TriadMonitor
-from repro.core.census import BACKENDS
+#: kept in sync with repro.core.census.BACKENDS (imported lazily in main
+#: so --mesh can force virtual devices before the first jax import)
+BACKENDS = ("jnp", "pallas", "pallas-fused")
 
 
 def background_traffic(rng, n_hosts, n_edges):
@@ -74,10 +78,27 @@ def main():
                     help="work-item emission mode (default: the engine "
                          "default, device — stream O(pairs) descriptors "
                          "and expand pairs→items in-kernel)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="build an N-device mesh and PARTITION each "
+                         "window's graph across it (each device holds "
+                         "only its pair shard's local subgraph; delta "
+                         "updates dispatch only the owning shards); "
+                         "prints the per-window shard report")
     ap.add_argument("--verbose", action="store_true",
                     help="print the per-window engine summary lines")
     args = ap.parse_args()
 
+    if args.mesh is not None and args.mesh >= 1 \
+            and "jax" not in sys.modules:
+        # force enough virtual host devices BEFORE the first jax import
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count="
+                f"{args.mesh}").strip()
+    from repro.core import SECURITY_PATTERNS, TriadMonitor, default_mesh
+
+    mesh = default_mesh(args.mesh) if args.mesh is not None else None
     rng = np.random.default_rng(0)
     n_hosts, per_window = 400, args.window
     # overlapping windows arrive window/stride times as often, so scale
@@ -88,7 +109,8 @@ def main():
         n_hosts, window=per_window, stride=stride, history=history,
         threshold=args.threshold, backend=args.backend,
         incremental=not args.no_incremental,
-        max_items=4096, emit=args.emit)
+        max_items=4096, emit=args.emit,
+        mesh=mesh, partition=mesh is not None)
 
     scan_size = 200
     attack_windows = {25, 26, 27}
@@ -124,9 +146,19 @@ def main():
         total_full += st.full_items
         fired = ",".join(f"{a['pattern']}(z={a['zscore']:.1f})"
                          for a in alarms_at.get(t, []))
+        shard = ""
+        if st.partitioned:
+            # per-window shard report: dispatched items per shard, their
+            # imbalance, and the per-device resident graph bytes vs what
+            # replication would hold
+            shard = (f" shards={st.shard_items}"
+                     f" mom={st.shard_max_over_mean:.2f}"
+                     f" gbytes={st.graph_resident_bytes}"
+                     f"/{st.graph_replicated_bytes}")
         line = (f"  window {t:>3}  items={st.items:>7}/{st.full_items:<7}"
                 f" chunks={st.chunks:<2} affected_pairs="
-                f"{st.affected_pairs:<5} {('ALARM ' + fired) if fired else ''}")
+                f"{st.affected_pairs:<5}{shard} "
+                f"{('ALARM ' + fired) if fired else ''}")
         if args.verbose or fired:
             print(line)
     print(f"\ntotals: {total_items} items dispatched vs {total_full} for "
@@ -134,6 +166,18 @@ def main():
           f"({total_full / max(total_items, 1):.2f}x reduction); "
           f"chunk step compiles: "
           f"{sum(s.step_compiles for s in monitor.window_stats)}")
+    if mesh is not None and monitor.window_stats:
+        last = monitor.window_stats[-1]
+        moms = [s.shard_max_over_mean for s in monitor.window_stats
+                if s.partitioned and s.items]
+        print(f"\nshard report ({args.mesh}-device mesh, partitioned "
+              f"graph): per-device resident graph bytes "
+              f"{last.graph_resident_bytes} vs replicated "
+              f"{last.graph_replicated_bytes} "
+              f"({last.graph_replicated_bytes / max(last.graph_resident_bytes, 1):.2f}x);"
+              f" dispatch max/mean over windows: "
+              f"mean {np.mean(moms) if moms else 1.0:.2f} "
+              f"max {np.max(moms) if moms else 1.0:.2f}")
 
     # map flagged stream windows back onto the injected attack spans
     flagged = {a["window"] for a in alarms}

@@ -16,6 +16,13 @@ Public API::
     session = engine.session(g)
     c0 = session.census()
     c1 = session.update(add_src, add_dst, del_src, del_dst)
+
+    # partitioned: shard the GRAPH, not just the items — each device
+    # holds only its pair shard's local subgraph (O(E_shard + halo))
+    part = partition_graph(g, num_shards=8); print(shard_report(part))
+    engine = CensusEngine(mesh, backend="pallas-fused", partition=True)
+    census = engine.run(g)            # bit-identical, private shards
+    session = engine.session(g)       # deltas dispatch owning shards only
 """
 
 from repro.core.digraph import (
@@ -25,15 +32,21 @@ from repro.core.planner import (
     CensusPlan, DescriptorWindow, PairSpace, base_for_pairs, build_plan,
     descriptor_window, emit_items, emit_items_for_pairs,
     iter_descriptor_windows, pack_items, pair_space, unpack_items)
-from repro.core.plan_stream import PlanChunk, PlanChunker, iter_plan_chunks
+from repro.core.plan_stream import (
+    PlanChunk, PlanChunker, ShardSchedule, iter_plan_chunks)
 from repro.core.census import triad_census, assemble_census
 from repro.core.engine import (
-    CensusEngine, EMIT_MODES, EngineSession, EngineStats)
+    CensusEngine, EMIT_MODES, EngineSession, EngineStats,
+    PartitionedEngineSession)
 from repro.core.incremental import (
     affected_pair_ids, subset_contribution, subset_descriptor_windows,
     verify_delta_closure)
+from repro.core.partition import (
+    GraphPartition, LocalShard, PartitionStats, extract_shard,
+    lpt_assign, partition_graph, replicated_graph_bytes)
 from repro.core.distributed import (
-    triad_census_distributed, triad_census_graph, default_mesh)
+    shard_report, triad_census_distributed, triad_census_graph,
+    default_mesh)
 from repro.core.census_ref import (
     census_bruteforce, census_batagelj_mrvar, census_dict)
 from repro.core.tricode import (
@@ -50,10 +63,14 @@ __all__ = [
     "build_plan", "descriptor_window", "emit_items",
     "emit_items_for_pairs", "iter_descriptor_windows", "pack_items",
     "pair_space", "unpack_items",
-    "PlanChunk", "PlanChunker", "iter_plan_chunks",
+    "PlanChunk", "PlanChunker", "ShardSchedule", "iter_plan_chunks",
     "CensusEngine", "EMIT_MODES", "EngineSession", "EngineStats",
+    "PartitionedEngineSession",
     "affected_pair_ids", "subset_contribution",
     "subset_descriptor_windows", "verify_delta_closure",
+    "GraphPartition", "LocalShard", "PartitionStats", "extract_shard",
+    "lpt_assign", "partition_graph", "replicated_graph_bytes",
+    "shard_report",
     "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",

@@ -1,24 +1,37 @@
-"""Distributed triad census: thin wrappers over the streaming engine.
+"""Distributed triad census: the public partition + mesh API.
 
-The actual dispatch — shard_map over a device mesh, privatized 64-bin
-tricode histograms + 2-bin intersection counters per device, one ``psum``
-at the end (the paper's 64 hashed local census vectors mapped onto a pod's
-memory hierarchy) — lives in :class:`repro.core.engine.CensusEngine`,
-shared with the single-device driver.  What remains here is the public
-distributed API:
+Two distribution regimes, both ending in the paper's single merge of
+per-processor private census vectors:
 
+* **Replicated** (the default): every device holds the whole CSR and the
+  flat work items are sharded across the mesh.  Right for graphs that fit
+  one device's memory anyway — zero partitioning overhead, perfect item
+  balance by construction.
+* **Partitioned** (``partition=True`` / :func:`partition_graph`): the
+  pair space is LPT-split into one private shard per device
+  (:mod:`repro.core.partition`), each device holds only its shard's
+  relabeled local subgraph — O(E_shard + halo) resident bytes instead of
+  O(E) — and walks its own descriptor stream inside the compile-once
+  collective step; the private histograms meet in one ``psum``.
+  Bit-identical to the replicated and single-device paths for every
+  backend, orient and emit mode.
+
+What lives here is the public surface:
+
+* :func:`partition_graph` / :class:`GraphPartition` /
+  :class:`PartitionStats` / :func:`shard_report` — the partition layer,
+  usable standalone (inspect balance and residency before committing to
+  a mesh shape).
+* :func:`default_mesh` — flat mesh over all (or the first ``k``) local
+  devices.
 * :func:`triad_census_distributed` — exact census of a prebuilt
-  (monolithic) plan across every device of a mesh.
-* :func:`triad_census_graph` — plan + count in one call; pass
-  ``max_items`` to stream the plan as bounded chunks instead of one
-  O(W) dispatch (see :mod:`repro.core.plan_stream`), with per-chunk
-  uploads sharded over the mesh and partials accumulated on the host.
+  (monolithic, replicated) plan across a mesh.
+* :func:`triad_census_graph` — plan + count in one call, streaming
+  (``max_items``), emission (``emit``) and partitioning (``partition``)
+  knobs included.
 
-Work items travel as the planner's two packed int32 words per item
-(``item_sp``/``item_pv``), halving the host→device transfer and the sharded
-HBM footprint relative to the four legacy streams.  ``backend`` selects the
-same per-shard paths as :func:`repro.core.census.triad_census`, including
-``"pallas-fused"`` (the whole per-item pipeline in one kernel per shard).
+Dispatch lives in :class:`repro.core.engine.CensusEngine`, shared with
+the single-device driver.
 """
 
 from __future__ import annotations
@@ -27,20 +40,48 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.planner import CensusPlan
 from repro.core.digraph import CompactDigraph
+from repro.core.partition import (
+    GraphPartition, LocalShard, PartitionStats, extract_shard,
+    graph_bytes, lpt_assign, partition_graph, replicated_graph_bytes)
+from repro.core.planner import CensusPlan
+
+__all__ = [
+    "GraphPartition", "LocalShard", "PartitionStats", "default_mesh",
+    "extract_shard", "graph_bytes", "lpt_assign", "partition_graph",
+    "replicated_graph_bytes", "shard_report", "triad_census_distributed",
+    "triad_census_graph",
+]
 
 
-def default_mesh() -> Mesh:
-    """Flat mesh over all local devices."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("devices",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+def default_mesh(num_devices: int | None = None) -> Mesh:
+    """Flat mesh over all local devices, or the first ``num_devices`` of
+    them (sub-meshes are how the shard-count invariance suites sweep
+    1/2/4/8 shards on one host)."""
+    devs = jax.devices()
+    if num_devices is None:
+        n = len(devs)
+        return jax.make_mesh((n,), ("devices",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    k = int(num_devices)
+    if not 1 <= k <= len(devs):
+        raise ValueError(
+            f"num_devices must be in [1, {len(devs)}], got {k}")
+    return Mesh(np.asarray(devs[:k]), ("devices",))
+
+
+def shard_report(part: GraphPartition) -> str:
+    """Human-readable per-shard balance + residency table of a
+    :func:`partition_graph` result."""
+    return part.stats.report()
 
 
 def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,
                              backend: str = "jnp") -> np.ndarray:
-    """Exact 16-type census computed across all devices of ``mesh``."""
+    """Exact 16-type census computed across all devices of ``mesh``
+    (replicated graph, sharded items — prebuilt plans carry global
+    coordinates; partition from the graph via :func:`triad_census_graph`
+    instead)."""
     from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
@@ -51,18 +92,22 @@ def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
                        backend: str = "jnp", orient: str = "none",
                        max_items: int | None = None,
                        progress=None,
-                       emit: str | None = None) -> np.ndarray:
+                       emit: str | None = None,
+                       partition: bool = False) -> np.ndarray:
     """Convenience: plan + distribute + count in one call.
 
     ``max_items=None`` reproduces the historical one-dispatch schedule;
     an integer budget streams the plan in O(max_items) host memory.
     ``emit`` picks the work-item path (default ``"device"``: descriptor
     upload + in-kernel pair→item expansion; ``"host"``: packed-item
-    upload) — bit-identical either way.
+    upload).  ``partition=True`` shards the GRAPH across the mesh — each
+    device holds only its pair shard's local subgraph and walks its own
+    stream (:mod:`repro.core.partition`).  Bit-identical on every
+    combination.
     """
     from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
-    engine = CensusEngine(mesh=mesh, backend=backend)
+    engine = CensusEngine(mesh=mesh, backend=backend, partition=partition)
     return engine.run(g, max_items=max_items, orient=orient,
                       progress=progress, emit=emit)

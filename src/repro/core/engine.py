@@ -49,11 +49,23 @@ recompiles it), and edge deltas are applied incrementally — only the
 *affected pairs* (endpoint row changed) are re-counted, old partials
 subtracted and new ones added, bit-identical to a from-scratch census
 (:mod:`repro.core.incremental`).
+
+Orthogonally to all of the above, ``partition=True`` shards the GRAPH
+instead of replicating it (:mod:`repro.core.partition`): the pair space
+is LPT-split into one private shard per mesh device, each device holds
+only its shard's order-preservingly relabeled local subgraph
+(O(E_shard + halo) resident bytes instead of O(E)) and walks its own
+descriptor/item stream — through the partitioned collective steps for
+full runs (`_part_chunk_step` / `_part_desc_step`: graph arrays are
+sharded inputs with a leading device axis, one closing psum) and through
+per-device committed dispatches for :class:`PartitionedEngineSession`,
+whose delta updates touch only the shards owning affected pairs.
 """
 
 from __future__ import annotations
 
 import functools
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -69,12 +81,15 @@ from repro.core.digraph import CompactDigraph, GraphDelta, apply_delta
 from repro.core.incremental import (
     affected_pair_ids, combine, contribution_counts,
     subset_descriptor_windows)
+from repro.core.partition import (
+    extract_shard, partition_graph, replicated_graph_bytes,
+    stacked_device_arrays)
 from repro.core.planner import (
     DESC_BYTES, DESC_SEARCH_ITERS, CensusPlan, base_for_pairs,
     build_plan, emit_items, emit_items_for_pairs, global_bases,
     iter_descriptor_windows, max_pairs_per_window, num_desc_anchors,
-    pad_and_pack, pair_space)
-from repro.core.plan_stream import PlanChunker
+    pad_and_pack, pair_space, postprune_pair_counts)
+from repro.core.plan_stream import PlanChunker, ShardSchedule
 
 #: work-item emission modes: ``device`` streams O(pairs) descriptors and
 #: expands pairs→items in-kernel (the default); ``host`` materializes and
@@ -187,6 +202,78 @@ _desc_step = functools.partial(
         "prune_self"))(_desc_step_impl)
 
 
+def _part_chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
+                          item_sp, item_pv, mesh, search_iters, backend):
+    """Partitioned twin of :func:`_chunk_step_impl`: every array carries a
+    leading device axis and is SHARDED over the mesh — each device
+    consumes its own local-CSR row and its own packed item window (graph
+    arrays are sharded inputs, not replicated closures) — and the private
+    histograms meet in the single closing psum.
+    """
+    partials = partials_fn(backend, search_iters)
+    axes = mesh.axis_names
+
+    def shard_fn(ip, pk, pu, pv, pc, wsp, wpv):
+        hist64, inter = partials(
+            ip.reshape(-1), pk.reshape(-1), pu.reshape(-1),
+            pv.reshape(-1), pc.reshape(-1), wsp.reshape(-1),
+            wpv.reshape(-1))
+        return jax.lax.psum(hist64, axes), jax.lax.psum(inter, axes)
+
+    sh = P(axes)
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=(sh,) * 7, out_specs=(P(), P()),
+        check_vma=(backend == "jnp"))
+    return fn(indptr, packed, pair_u, pair_v, pair_code, item_sp, item_pv)
+
+
+_part_chunk_step = functools.partial(
+    jax.jit, static_argnames=_STATIC)(_part_chunk_step_impl)
+
+
+def _part_desc_step_impl(indptr, packed, pair_u, pair_v, pair_code,
+                         desc_words, idx, mesh, search_iters, desc_iters,
+                         backend, orient, prune_self):
+    """Partitioned twin of :func:`_desc_step_impl`: per-device descriptor
+    windows against per-device local-CSR buffers.  Every graph/pair/word
+    array is (ndev, ·) sharded over the mesh — each device expands and
+    classifies ITS OWN window of its own shard's stream — while the flat
+    item-index array stays replicated (every device walks lanes
+    ``[0, chunk_shape)`` of its private window).  One psum merges the
+    private histograms.
+    """
+    num_anchors = num_desc_anchors(idx.shape[0])
+    num_descs = (desc_words.shape[1] - 1 - num_anchors) // 3
+    partials = desc_partials_fn(backend, search_iters, desc_iters,
+                                orient, prune_self)
+    axes = mesh.axis_names
+
+    def shard_fn(ip, pk, pu, pv, pc, words, ix):
+        words = words.reshape(-1)
+        nv = words[:1]
+        dp = words[1:1 + num_descs]
+        dc = words[1 + num_descs:1 + 2 * num_descs]
+        dw = words[1 + 2 * num_descs:1 + 3 * num_descs]
+        an = words[1 + 3 * num_descs:]
+        hist64, inter = partials(
+            ip.reshape(-1), pk.reshape(-1), pu.reshape(-1),
+            pv.reshape(-1), pc.reshape(-1), dp, dc, dw, an, nv, ix)
+        return jax.lax.psum(hist64, axes), jax.lax.psum(inter, axes)
+
+    sh = P(axes)
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(sh, sh, sh, sh, sh, sh, P()), out_specs=(P(), P()),
+        check_vma=(backend == "jnp"))
+    return fn(indptr, packed, pair_u, pair_v, pair_code, desc_words, idx)
+
+
+_part_desc_step = functools.partial(
+    jax.jit, static_argnames=(
+        "mesh", "search_iters", "desc_iters", "backend", "orient",
+        "prune_self"))(_part_desc_step_impl)
+
+
 def _jit_cache_size(step) -> int:
     """Compile counter via jax's private ``_cache_size`` — if a jax
     upgrade drops it, only the ``step_compiles`` stat degrades (to 0),
@@ -196,6 +283,25 @@ def _jit_cache_size(step) -> int:
 
 #: bytes per packed work item (two int32 words)
 ITEM_BYTES = 8
+
+
+def _desc_capacity(chunk_shape: int, need: int) -> int:
+    """Session descriptor capacity for a ``chunk_shape``-lane dispatch:
+    2x headroom over the densest full-stream window (sparser
+    affected-pair subsets span more pairs per item), capped at the
+    structural bound of ``chunk_shape/2 + 1`` pairs per window — every
+    pair spans >= 2 pre-prune items.  Overflowing windows shrink their
+    item span instead (:func:`repro.core.planner
+    .iter_descriptor_windows`), so this is never a recompile vector."""
+    return min(chunk_shape // 2 + 1, max(64, 2 * need))
+
+
+def _guard_chunk_shape(chunk_shape: int) -> int:
+    if chunk_shape >= 2**31:
+        raise ValueError(
+            "chunk exceeds int32 item indexing; pass a smaller "
+            "max_items budget")
+    return chunk_shape
 
 
 def _land_desc_partials(fut, hist_acc: np.ndarray, inter_acc: np.ndarray,
@@ -248,14 +354,38 @@ class EngineStats:
     emit: str = "host"
     #: fixed per-dispatch descriptor-array length (device emission only)
     desc_shape: int = 0
-    #: host→device *plan* bytes shipped per dispatch: the packed item
-    #: words under host emission, the descriptor window (+ 4-byte valid
-    #: count) under device emission — the traffic the emit knob trades
+    #: *physical per-device* host→device plan bytes shipped per dispatch:
+    #: the packed item words under host emission (divided across the mesh
+    #: when the item arrays are sharded), the descriptor window (+ 4-byte
+    #: valid count) under device emission (replicated on every device
+    #: un-partitioned, one private window per device partitioned) — the
+    #: traffic the emit knob trades
     plan_upload_bytes: int = 0
     #: jitted-step compilations forced by session capacity growth (graph
     #: buffers regrown past their padded device shapes), counted apart
     #: from ``step_compiles`` so the compile-once contract stays auditable
     capacity_recompiles: int = 0
+    #: True when the run sharded the GRAPH (each device held only its
+    #: pair shard's local subgraph), not just the work items
+    partitioned: bool = False
+    #: per-shard post-prune work items owned (partitioned runs: the LPT
+    #: balance record; per-update dispatch record for sessions)
+    shard_items: list[int] = field(default_factory=list)
+    #: per-device resident graph + pair bytes: the max shard footprint
+    #: when partitioned, the full replicated footprint otherwise
+    graph_resident_bytes: int = 0
+    #: what replication would have made ``graph_resident_bytes`` — equal
+    #: to it on un-partitioned runs, ≥ it (the byte-reduction numerator)
+    #: on partitioned ones
+    graph_replicated_bytes: int = 0
+
+    @property
+    def shard_max_over_mean(self) -> float:
+        """Shard work imbalance (1.0 == perfectly balanced shards)."""
+        if not self.shard_items or not sum(self.shard_items):
+            return 1.0
+        mean = sum(self.shard_items) / len(self.shard_items)
+        return max(self.shard_items) / mean
 
     @property
     def chunk_max_over_mean(self) -> float:
@@ -268,34 +398,58 @@ class EngineStats:
     def summary(self) -> str:
         mode = (f"streamed max_items={self.max_items}" if self.streamed
                 else "monolithic")
+        part = ""
+        if self.partitioned:
+            part = (f" partitioned shards={len(self.shard_items)} "
+                    f"shard_max_over_mean={self.shard_max_over_mean:.3f} "
+                    f"graph_bytes={self.graph_resident_bytes}"
+                    f"/{self.graph_replicated_bytes}")
         return (f"{self.backend} [{mode} emit={self.emit}] "
                 f"chunks={self.chunks} items={self.items} "
                 f"peak_plan_bytes={self.peak_plan_bytes} "
                 f"(monolithic {self.monolithic_plan_bytes}) "
                 f"plan_upload_bytes={self.plan_upload_bytes} "
                 f"chunk_max_over_mean={self.chunk_max_over_mean:.3f} "
-                f"step_compiles={self.step_compiles}")
+                f"step_compiles={self.step_compiles}" + part)
 
 
 class CensusEngine:
     """Owns mesh + backend dispatch for monolithic and streamed censuses.
 
     ``mesh=None`` executes on the default device; a :class:`Mesh` shards
-    every chunk's items across all mesh axes.  After each ``run`` /
-    ``run_plan`` the execution record is available as :attr:`stats`.
+    every chunk's items across all mesh axes.  ``partition=True``
+    additionally shards the GRAPH: the pair space is LPT-split into one
+    private shard per mesh device (:mod:`repro.core.partition`), each
+    device holds only its shard's relabeled local subgraph and walks its
+    own descriptor/item stream inside the compile-once collective step,
+    and the private histograms merge in a single psum — per-device
+    resident graph bytes drop from O(E) to O(E_shard + halo), with
+    bit-identical censuses.  Replication (the default) remains right for
+    graphs small enough to fit every device anyway — partitioning spends
+    host-side extraction work to shrink device residency.  After each
+    ``run`` / ``run_plan`` the execution record is available as
+    :attr:`stats`.
     """
 
     def __init__(self, mesh: Mesh | None = None, backend: str = "jnp",
-                 emit: str = "device"):
+                 emit: str = "device", partition: bool = False):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
         if emit not in EMIT_MODES:
             raise ValueError(
                 f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        if partition:
+            if mesh is None:
+                raise ValueError("partition=True requires a mesh")
+            if mesh.devices.ndim != 1:
+                raise ValueError(
+                    "partitioned execution shards over a 1-D mesh; got "
+                    f"shape {mesh.devices.shape}")
         self.mesh = mesh
         self.backend = backend
         self.emit = emit
+        self.partition = partition
         self.stats: EngineStats | None = None
 
     @property
@@ -318,6 +472,8 @@ class CensusEngine:
     def _mono_stats(self, plan: CensusPlan,
                     max_items: int | None = None) -> EngineStats:
         wp = int(plan.item_sp.shape[0])
+        gbytes = 4 * (plan.indptr.shape[0] + plan.packed.shape[0]
+                      + 3 * plan.num_pairs)
         return EngineStats(
             backend=self.backend, ndev=self.ndev, orient=plan.orient,
             streamed=False, max_items=max_items,
@@ -326,11 +482,18 @@ class CensusEngine:
             chunk_items=[plan.num_items] if plan.num_items else [],
             peak_plan_bytes=ITEM_BYTES * wp,
             monolithic_plan_bytes=ITEM_BYTES * wp,
-            emit="host", plan_upload_bytes=ITEM_BYTES * wp)
+            emit="host",
+            # items are sharded over the mesh: physical per-device bytes
+            plan_upload_bytes=ITEM_BYTES * wp // self.ndev,
+            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
 
     # ------------------------------------------------------------- running
     def run_plan(self, plan: CensusPlan) -> np.ndarray:
         """Exact 16-type census from a prebuilt (monolithic) plan."""
+        if self.partition:
+            raise ValueError(
+                "prebuilt plans are replicated; partitioned execution "
+                "plans from the graph — use run()/session()")
         wp = int(plan.item_sp.shape[0])
         if self.mesh is not None and wp % self.ndev != 0:
             raise ValueError(
@@ -378,6 +541,11 @@ class CensusEngine:
         if emit not in EMIT_MODES:
             raise ValueError(
                 f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        if self.partition:
+            return self._run_partitioned(g, max_items=max_items,
+                                         orient=orient,
+                                         prune_self=prune_self,
+                                         progress=progress, emit=emit)
         if emit == "device":
             chunker = PlanChunker(g, max_items, orient=orient,
                                   pad_to=self.ndev, prune_self=prune_self)
@@ -393,21 +561,29 @@ class CensusEngine:
 
     def session(self, g: CompactDigraph, *, orient: str = "none",
                 prune_self: bool = True, max_items: int | None = None,
-                emit: str | None = None) -> "EngineSession":
+                emit: str | None = None):
         """Open a resident-graph session on ``g`` for repeated / sliding-
-        window censuses (see :class:`EngineSession`)."""
-        return EngineSession(self, g, orient=orient, prune_self=prune_self,
-                             max_items=max_items, emit=emit)
+        window censuses (see :class:`EngineSession`; a partitioned engine
+        opens a :class:`PartitionedEngineSession`, whose delta updates
+        dispatch only the shards owning touched pairs)."""
+        cls = PartitionedEngineSession if self.partition else EngineSession
+        return cls(self, g, orient=orient, prune_self=prune_self,
+                   max_items=max_items, emit=emit)
 
     def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
         space = chunker.space
+        gbytes = replicated_graph_bytes(space)
         self.stats = EngineStats(
             backend=self.backend, ndev=self.ndev, orient=space.orient,
             streamed=True, max_items=chunker.max_items,
             chunks=chunker.num_chunks, chunk_shape=chunker.chunk_shape,
             items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape,
             emit="host",
-            plan_upload_bytes=ITEM_BYTES * chunker.chunk_shape)
+            # item arrays are sharded over the mesh (chunk_shape is a
+            # multiple of ndev): physical per-device upload bytes
+            plan_upload_bytes=ITEM_BYTES * chunker.chunk_shape
+            // self.ndev,
+            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
         if chunker.num_chunks == 0:
             return assemble_counts(space.n, 0, 0, np.zeros(64, np.int64),
                                    np.zeros(2, np.int64))
@@ -469,15 +645,19 @@ class CensusEngine:
         provably a zero contribution (see
         :func:`repro.core.census.prune_keep_mask`)."""
         space = chunker.space
+        # the descriptor buffer is replicated on every device: the padded
+        # window IS the physical per-device upload
         upload = (DESC_BYTES * chunker.desc_shape
                   + 4 * chunker.num_anchors + 4)
+        gbytes = replicated_graph_bytes(space)
         self.stats = EngineStats(
             backend=self.backend, ndev=self.ndev, orient=space.orient,
             streamed=max_items is not None, max_items=max_items,
             chunks=chunker.num_chunks, chunk_shape=chunker.chunk_shape,
             items=0, peak_plan_bytes=ITEM_BYTES * chunker.chunk_shape,
             emit="device", desc_shape=chunker.desc_shape,
-            plan_upload_bytes=upload)
+            plan_upload_bytes=upload,
+            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
         if chunker.num_chunks == 0:
             return assemble_counts(space.n, 0, 0, np.zeros(64, np.int64),
                                    np.zeros(2, np.int64))
@@ -529,12 +709,123 @@ class CensusEngine:
         return assemble_counts(space.n, base_asym, base_mut,
                                hist_acc, inter_acc)
 
+    def _run_partitioned(self, g: CompactDigraph, *,
+                         max_items: int | None, orient: str,
+                         prune_self: bool, progress, emit: str
+                         ) -> np.ndarray:
+        """Partitioned plan + count: LPT-shard the pair space, extract one
+        local subgraph per mesh device, and advance every device's private
+        chunk queue in lock step through the compile-once collective step
+        (:class:`repro.core.plan_stream.ShardSchedule`).  Each device holds
+        only ITS shard's relabeled CSR + pair arrays; per step it receives
+        only its own descriptor window (``emit="device"``) or packed item
+        window (``emit="host"``), and the private histograms merge in the
+        single closing psum.  Bit-identical to the replicated and
+        single-device paths for every backend, orient and emit mode (the
+        relabeling is order-preserving, the pair partition is exact)."""
+        part = partition_graph(num_shards=self.ndev, space=pair_space(
+            g, orient=orient, prune_self=prune_self))
+        space = part.space
+        sched = ShardSchedule([sh.space for sh in part.shards],
+                              max_items, self.ndev)
+        upload = (4 * (1 + 3 * sched.desc_shape + sched.num_anchors)
+                  if emit == "device"
+                  else ITEM_BYTES * sched.chunk_shape)
+        self.stats = EngineStats(
+            backend=self.backend, ndev=self.ndev, orient=orient,
+            streamed=max_items is not None, max_items=max_items,
+            chunks=sched.num_steps,
+            chunk_shape=sched.chunk_shape * self.ndev,
+            items=0,
+            peak_plan_bytes=ITEM_BYTES * sched.chunk_shape * self.ndev,
+            emit=emit,
+            desc_shape=sched.desc_shape if emit == "device" else 0,
+            plan_upload_bytes=upload, partitioned=True,
+            shard_items=list(part.stats.shard_items),
+            graph_resident_bytes=part.stats.max_shard_bytes,
+            graph_replicated_bytes=part.stats.replicated_bytes)
+        base_asym, base_mut = global_bases(space)
+        if sched.num_steps == 0:
+            return assemble_counts(space.n, base_asym, base_mut,
+                                   np.zeros(64, np.int64),
+                                   np.zeros(2, np.int64))
+
+        rep, dev_sh = self._shardings()
+        graph_dev = tuple(self._put(a, dev_sh)
+                          for a in stacked_device_arrays(part.shards))
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        chunk_items: list[int] = []
+        pending = None
+        if emit == "device":
+            idx_dev = self._put(
+                jnp.arange(sched.chunk_shape, dtype=jnp.int32), rep)
+            step = _part_desc_step
+            cache0 = _jit_cache_size(step)
+
+            def land(fut, k):
+                num = _land_desc_partials(fut, hist_acc, inter_acc,
+                                          chunk_items)
+                if progress is not None:
+                    progress(k, sched.num_steps, num)
+
+            for k in range(sched.num_steps):
+                words = self._put(sched.step_words(k), dev_sh)
+                fut = step(*graph_dev, words, idx_dev, self.mesh,
+                           space.search_iters, sched.desc_iters,
+                           self.backend, space.orient, space.prune_self)
+                if pending is not None:
+                    land(pending, k - 1)
+                pending = fut
+            if pending is not None:
+                land(pending, sched.num_steps - 1)
+        else:
+            step = _part_chunk_step
+            cache0 = _jit_cache_size(step)
+            for k in range(sched.num_steps):
+                item_sp, item_pv, nums = sched.step_items(k)
+                chunk_items.append(int(sum(nums)))
+                if progress is not None:
+                    progress(k, sched.num_steps, chunk_items[-1])
+                fut = step(graph_dev[0], graph_dev[1], graph_dev[2],
+                           graph_dev[3], graph_dev[4],
+                           self._put(item_sp, dev_sh),
+                           self._put(item_pv, dev_sh),
+                           self.mesh, space.search_iters, self.backend)
+                if pending is not None:
+                    hist_acc += np.asarray(pending[0], dtype=np.int64)
+                    inter_acc += np.asarray(pending[1], dtype=np.int64)
+                pending = fut
+            if pending is not None:
+                hist_acc += np.asarray(pending[0], dtype=np.int64)
+                inter_acc += np.asarray(pending[1], dtype=np.int64)
+
+        st = self.stats
+        st.step_compiles = _jit_cache_size(step) - cache0
+        st.chunk_items = chunk_items
+        st.items = int(sum(chunk_items))
+        mono_wp = -(-st.items // self.ndev) * self.ndev
+        st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
+        return assemble_counts(space.n, base_asym, base_mut,
+                               hist_acc, inter_acc)
+
 
 def _pad_i32(a: np.ndarray, cap: int) -> np.ndarray:
     """Zero-pad an int32 array to a fixed capacity (device shape)."""
     out = np.zeros(cap, dtype=np.int32)
     out[:a.shape[0]] = a
     return out
+
+
+def _split_capacity_compiles(session, chunk_items: list, compiles: int
+                             ) -> tuple[int, int]:
+    """(capacity_recompiles, step_compiles) attribution shared by both
+    session kinds: the first dispatches after the resident buffers regrew
+    charge any fresh compile to the capacity growth, not the step."""
+    if session._capacity_grew and chunk_items:
+        session._capacity_grew = False
+        return compiles, 0
+    return 0, compiles
 
 
 class EngineSession:
@@ -635,20 +926,15 @@ class EngineSession:
         return cap
 
     def _init_device_emission(self) -> None:
-        """Fix the session's descriptor geometry: a per-dispatch
-        descriptor capacity sized to the initial graph's schedule (with
-        2x headroom for sparser affected-pair subsets, capped at the
-        structural bound of chunk_shape/2 + 1 pairs per window — every
-        pair spans >= 2 pre-prune items), the matching pinned lower-bound
-        depth, and the resident flat-index array the windows expand
-        against.  Windows that would overflow the capacity shrink their
-        item span instead (:func:`repro.core.planner
-        .iter_descriptor_windows`), so no graph revision or delta can
-        ever force a descriptor-shape recompile."""
+        """Fix the session's descriptor geometry: the per-dispatch
+        descriptor capacity (:func:`_desc_capacity`), the matching pinned
+        lower-bound depth, and the resident flat-index array the windows
+        expand against — none of which any graph revision or delta can
+        ever force to recompile."""
         space = self._space
         cs = self.chunk_shape
-        need = max_pairs_per_window(space.offsets, cs)
-        self.desc_shape = min(cs // 2 + 1, max(64, 2 * need))
+        self.desc_shape = _desc_capacity(
+            cs, max_pairs_per_window(space.offsets, cs))
         self.desc_iters = DESC_SEARCH_ITERS
         self.num_anchors = num_desc_anchors(cs)
         self._idx = self.engine._put(
@@ -665,12 +951,9 @@ class EngineSession:
         if self.chunk_shape is None:
             budget = (self.max_items if self.max_items is not None
                       else max(space.num_items_preprune, 1))
-            self.chunk_shape = -(-max(int(budget), 1)
-                                 // self.engine.ndev) * self.engine.ndev
-            if self.chunk_shape >= 2**31:
-                raise ValueError(
-                    "chunk exceeds int32 item indexing; pass a smaller "
-                    "max_items budget")
+            self.chunk_shape = _guard_chunk_shape(
+                -(-max(int(budget), 1)
+                  // self.engine.ndev) * self.engine.ndev)
         prev_caps = (self._cap_entries, self._cap_pairs)
         self._cap_entries = self._grown(self._cap_entries,
                                         space.packed.shape[0])
@@ -813,12 +1096,9 @@ class EngineSession:
                    full_items: int, affected_pairs: int,
                    compiles: int) -> None:
         ndev = self.engine.ndev
-        capacity_recompiles = 0
-        if self._capacity_grew and chunk_items:
-            # first dispatches on the regrown buffers: any fresh compile
-            # they forced is the capacity's fault, not the step's
-            capacity_recompiles, compiles = compiles, 0
-            self._capacity_grew = False
+        capacity_recompiles, compiles = _split_capacity_compiles(
+            self, chunk_items, compiles)
+        gbytes = replicated_graph_bytes(self._space)
         self.stats = EngineStats(
             backend=self.engine.backend, ndev=ndev, orient=self.orient,
             streamed=True, max_items=self.max_items,
@@ -831,11 +1111,14 @@ class EngineSession:
             full_items=full_items, affected_pairs=affected_pairs,
             emit=self.emit,
             desc_shape=self.desc_shape or 0,
+            # physical per-device plan bytes: descriptor windows are
+            # replicated, item arrays sharded over the mesh
             plan_upload_bytes=(
                 DESC_BYTES * self.desc_shape + 4 * self.num_anchors + 4
                 if self.emit == "device"
-                else ITEM_BYTES * self.chunk_shape),
-            capacity_recompiles=capacity_recompiles)
+                else ITEM_BYTES * self.chunk_shape // ndev),
+            capacity_recompiles=capacity_recompiles,
+            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
         self.engine.stats = self.stats
 
     def census(self) -> np.ndarray:
@@ -895,6 +1178,444 @@ class EngineSession:
         self._census = combine(self._census, contrib_old, contrib_new,
                                self.n)
         self._set_stats(chunks_old + chunks_new, items_old + items_new,
+                        self._postprune_items(),
+                        int(aff_old.shape[0] + aff_new.shape[0]),
+                        self._cache_size() - cache0)
+        return self._census.copy()
+
+
+class PartitionedEngineSession:
+    """Partition-resident census session: each shard lives on its device,
+    delta updates dispatch only the shards owning touched pairs.
+
+    On open the graph's pair space is LPT-split into one private shard
+    per mesh device (:mod:`repro.core.partition`); each shard's relabeled
+    local CSR + pair arrays are uploaded once into fixed-capacity buffers
+    committed to THAT device (capacities are common across shards and
+    grown geometrically, so one compiled single-device step serves every
+    shard and every graph revision — the binary-search depth is pinned to
+    ``ceil(log2 n)`` exactly like :class:`EngineSession`).  Per-shard
+    dispatches are independent and asynchronous, so devices overlap
+    naturally; partials are merged on the host (the paper's 64 private
+    census vectors, merged once).
+
+    :meth:`update` applies an edge delta and routes the recount by
+    ownership: the *affected pairs* (endpoint row changed) are looked up
+    in each shard's sorted key set, only the owning shards re-count their
+    slices (old contribution against the still-resident arrays, then new
+    contribution after only those shards re-extract + re-upload), and
+    **untouched shards dispatch nothing** — no descriptor/item upload, no
+    device work, their resident subgraphs provably unchanged.  Pairs that
+    appear in the delta are assigned to a shard already owning one of
+    their endpoints' pairs (locality), else to the lightest shard.
+    Bit-identical to a from-scratch census of the edited graph on every
+    backend, orient and emit mode.
+    """
+
+    def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
+                 orient: str = "none", prune_self: bool = True,
+                 max_items: int | None = None, emit: str | None = None):
+        if max_items is not None and max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {max_items}")
+        emit = engine.emit if emit is None else emit
+        if emit not in EMIT_MODES:
+            raise ValueError(
+                f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        self.engine = engine
+        self.orient = orient
+        self.prune_self = prune_self
+        self.emit = emit
+        self.n = g.n
+        self.max_items = max_items
+        self.ndev = engine.ndev
+        self._devices = list(engine.mesh.devices.flat)
+        #: pinned unrolled-search depth (see :class:`EngineSession`)
+        self.search_iters = max(1, int(np.ceil(np.log2(max(g.n, 2)))))
+        self._step = _chunk_step(engine.mesh)
+        self._cap_n = self._cap_entries = self._cap_pairs = 0
+        self._capacity_grew = False
+        self.chunk_shape: int | None = None
+        self.desc_shape: int | None = None
+        self._census: np.ndarray | None = None
+        self.last_delta: GraphDelta | None = None
+        self.stats: EngineStats | None = None
+        self._install_full(g)
+
+    # ------------------------------------------------------------ state
+    @property
+    def graph(self) -> CompactDigraph:
+        return self._g
+
+    @property
+    def space(self):
+        """The GLOBAL pair space of the resident graph."""
+        return self._space
+
+    @property
+    def shards(self):
+        return list(self._shards)
+
+    @property
+    def counts(self) -> np.ndarray | None:
+        return None if self._census is None else self._census.copy()
+
+    def _install_full(self, g: CompactDigraph) -> None:
+        """(Re)partition ``g`` from scratch and make every shard
+        device-resident (session open and :meth:`set_graph`)."""
+        self._g = g
+        space = pair_space(g, orient=self.orient,
+                           prune_self=self.prune_self)
+        self._space = space
+        self._full_items: int | None = None
+        part = partition_graph(num_shards=self.ndev, space=space)
+        self._shards = list(part.shards)
+        self._keys = [sh.keys for sh in self._shards]
+        self._load = [sh.items for sh in self._shards]
+        if self.chunk_shape is None:
+            budget = (self.max_items if self.max_items is not None
+                      else max(space.num_items_preprune, 1))
+            self.chunk_shape = _guard_chunk_shape(
+                -(-max(int(budget), 1) // self.ndev))
+        if self.emit == "device" and self.desc_shape is None:
+            cs = self.chunk_shape
+            self.desc_shape = _desc_capacity(
+                cs, max(max_pairs_per_window(sh.space.offsets, cs)
+                        for sh in self._shards))
+            self.desc_iters = DESC_SEARCH_ITERS
+            self.num_anchors = num_desc_anchors(cs)
+            self._idx = [
+                jax.device_put(np.arange(cs, dtype=np.int32), d)
+                for d in self._devices]
+        self._dev: list = [None] * self.ndev
+        self._upload_shards(range(self.ndev))
+
+    def _upload_shards(self, shard_ids) -> None:
+        """(Re)upload the listed shards' padded local arrays onto their
+        devices; a capacity growth changes every shard's padded shapes,
+        so it forces a full re-upload (and is accounted as a capacity
+        recompile, never a step compile)."""
+        need_n = max(max(sh.graph.indptr.shape[0]
+                         for sh in self._shards), 2)
+        need_e = max(max(sh.graph.packed.shape[0]
+                         for sh in self._shards), 1)
+        need_p = max(max(sh.num_pairs for sh in self._shards), 1)
+        prev = (self._cap_n, self._cap_entries, self._cap_pairs)
+        self._cap_n = EngineSession._grown(self._cap_n, need_n)
+        self._cap_entries = EngineSession._grown(self._cap_entries,
+                                                 need_e)
+        self._cap_pairs = EngineSession._grown(self._cap_pairs, need_p)
+        caps = (self._cap_n, self._cap_entries, self._cap_pairs)
+        if prev != caps:
+            if prev != (0, 0, 0):
+                self._capacity_grew = True
+            shard_ids = range(self.ndev)
+        for s in shard_ids:
+            sh = self._shards[s]
+            ip = np.zeros(self._cap_n, dtype=np.int32)
+            l = sh.graph.indptr.shape[0]
+            ip[:l] = sh.graph.indptr
+            ip[l:] = sh.graph.indptr[-1]      # phantom empty rows
+            dev = self._devices[s]
+            self._dev[s] = tuple(
+                jax.device_put(a, dev) for a in (
+                    ip, _pad_i32(sh.graph.packed, self._cap_entries),
+                    _pad_i32(sh.space.pair_u.astype(np.int32),
+                             self._cap_pairs),
+                    _pad_i32(sh.space.pair_v.astype(np.int32),
+                             self._cap_pairs),
+                    _pad_i32(sh.space.pair_code, self._cap_pairs)))
+
+    def set_graph(self, g: CompactDigraph) -> None:
+        """Replace the resident graph wholesale: fresh LPT partition,
+        every shard re-extracted + re-uploaded.  Invalidates the running
+        census until :meth:`census` recomputes."""
+        if g.n != self.n:
+            raise ValueError(f"session is pinned to n={self.n}, got {g.n}")
+        self._install_full(g)
+        self._census = None
+        self.last_delta = None
+
+    # ---------------------------------------------------------- running
+    def _dispatch_desc(self, s: int, win):
+        """One descriptor window against shard ``s``'s resident arrays,
+        on shard ``s``'s device (single-device step, async)."""
+        words = jax.device_put(win.device_words(), self._devices[s])
+        return _desc_step(*self._dev[s], words, self._idx[s], None,
+                          self.search_iters, self.desc_iters,
+                          self.engine.backend, self.orient,
+                          self.prune_self)
+
+    def _dispatch_items(self, s: int, item_pair, item_slot, item_side):
+        """One packed-item window against shard ``s``'s resident arrays
+        (host emission), on shard ``s``'s device."""
+        item_sp, item_pv = pad_and_pack(item_pair, item_slot, item_side,
+                                        self.chunk_shape)
+        dev = self._devices[s]
+        return self._step(*self._dev[s],
+                          jax.device_put(item_sp, dev),
+                          jax.device_put(item_pv, dev),
+                          None, self.search_iters, self.engine.backend)
+
+    def _shard_jobs(self, s: int, pair_ids=None):
+        """Yield shard ``s``'s dispatch futures: its full stream
+        (``pair_ids=None``) or an arbitrary local pair subset.  Host
+        emission yields ``(fut, num_items)``; device emission
+        ``(fut, None)`` (counts come back from the device)."""
+        sp = self._shards[s].space
+        cs = self.chunk_shape
+        if self.emit == "device":
+            wins = (iter_descriptor_windows(sp.offsets, cs,
+                                            self.desc_shape,
+                                            self.num_anchors)
+                    if pair_ids is None else
+                    subset_descriptor_windows(sp, pair_ids, cs,
+                                              self.desc_shape,
+                                              self.num_anchors))
+            for win in wins:
+                if win.num_preprune == 0:
+                    continue
+                yield self._dispatch_desc(s, win), None
+            return
+        if pair_ids is None:
+            w0 = sp.num_items_preprune
+            batches = (emit_items(sp, lo, min(lo + cs, w0))
+                       for lo in range(0, w0, cs))
+        else:
+            items = emit_items_for_pairs(sp, pair_ids)
+            batches = ((items[0][lo:lo + cs], items[1][lo:lo + cs],
+                        items[2][lo:lo + cs])
+                       for lo in range(0, max(int(items[0].shape[0]), 1),
+                                       cs))
+        for batch in batches:
+            num = int(batch[0].shape[0])
+            if num == 0:
+                continue
+            yield self._dispatch_items(s, *batch), num
+
+    def _job_stream(self, s: int, pair_ids=None):
+        """Shard ``s``'s jobs tagged with their shard id (a bound helper,
+        so per-shard generators never share a loop variable)."""
+        for fut, num in self._shard_jobs(s, pair_ids):
+            yield s, fut, num
+
+    def _land(self, futs, hist_acc, inter_acc, chunk_items, shard_items):
+        """Accumulate ``(shard, fut, num_or_None)`` results."""
+        for s, fut, num in futs:
+            if num is None:
+                num = _land_desc_partials(fut, hist_acc, inter_acc,
+                                          chunk_items)
+            else:
+                hist_acc += np.asarray(fut[0], dtype=np.int64)
+                inter_acc += np.asarray(fut[1], dtype=np.int64)
+                chunk_items.append(num)
+            shard_items[s] += num
+
+    def _drain(self, streams, hist_acc, inter_acc, chunk_items,
+               shard_items) -> None:
+        """Pull per-shard job streams round-robin (every device gets fed
+        each cycle) with a bounded in-flight window: at most
+        ``2 * ndev`` dispatches — and their chunk-shaped buffers — are
+        pending at once, so host and device memory stay
+        O(ndev · chunk_shape), never O(W) (the memory contract
+        ``max_items`` promises, matching :class:`EngineSession`'s
+        depth-1 pipelining)."""
+        limit = 2 * self.ndev
+        pending: deque = deque()
+        active = list(streams)
+        while active:
+            alive = []
+            for it in active:
+                job = next(it, None)
+                if job is None:
+                    continue
+                alive.append(it)
+                pending.append(job)
+                if len(pending) > limit:
+                    self._land([pending.popleft()], hist_acc, inter_acc,
+                               chunk_items, shard_items)
+            active = alive
+        self._land(pending, hist_acc, inter_acc, chunk_items,
+                   shard_items)
+
+    def _cache_size(self) -> int:
+        return _jit_cache_size(
+            _desc_step if self.emit == "device" else self._step)
+
+    def _postprune_items(self) -> int:
+        if self._full_items is None:
+            self._full_items = self._space.num_items_postprune()
+        return self._full_items
+
+    def _set_stats(self, chunk_items, shard_items, items, full_items,
+                   affected_pairs, compiles) -> None:
+        capacity_recompiles, compiles = _split_capacity_compiles(
+            self, chunk_items, compiles)
+        self.stats = EngineStats(
+            backend=self.engine.backend, ndev=self.ndev,
+            orient=self.orient, streamed=True, max_items=self.max_items,
+            chunks=len(chunk_items), chunk_shape=self.chunk_shape,
+            items=items, chunk_items=chunk_items,
+            peak_plan_bytes=ITEM_BYTES * self.chunk_shape,
+            monolithic_plan_bytes=ITEM_BYTES
+            * (-(-full_items // self.ndev) * self.ndev),
+            step_compiles=compiles,
+            full_items=full_items, affected_pairs=affected_pairs,
+            emit=self.emit, desc_shape=self.desc_shape or 0,
+            plan_upload_bytes=(
+                DESC_BYTES * self.desc_shape + 4 * self.num_anchors + 4
+                if self.emit == "device"
+                else ITEM_BYTES * self.chunk_shape),
+            capacity_recompiles=capacity_recompiles,
+            partitioned=True, shard_items=shard_items,
+            graph_resident_bytes=max(sh.resident_bytes
+                                     for sh in self._shards),
+            graph_replicated_bytes=replicated_graph_bytes(self._space))
+        self.engine.stats = self.stats
+
+    def census(self) -> np.ndarray:
+        """Full census of the resident graph: every shard walks its own
+        stream on its own device, partials merge on the host.  (Re)bases
+        the running C_k that :meth:`update` moves forward."""
+        cache0 = self._cache_size()
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        chunk_items: list[int] = []
+        shard_items = [0] * self.ndev
+        self._drain([self._job_stream(s) for s in range(self.ndev)],
+                    hist_acc, inter_acc, chunk_items, shard_items)
+        base_asym, base_mut = global_bases(self._space)
+        self._census = assemble_counts(self.n, base_asym, base_mut,
+                                       hist_acc, inter_acc)
+        items = int(sum(chunk_items))
+        self._full_items = items
+        self._set_stats(chunk_items, shard_items, items, items,
+                        self._space.num_pairs,
+                        self._cache_size() - cache0)
+        return self._census.copy()
+
+    def _recount(self, aff_keys, chunk_items, shard_items,
+                 touched_owner=None, touched=None):
+        """Contribution of the affected pairs, recounted shard by shard
+        on the CURRENT resident arrays; shards owning none of them are
+        never dispatched.  Returns (contribution, dirty shard ids)."""
+        base_asym = base_mut = 0
+        streams = []
+        dirty = []
+        for s in range(self.ndev):
+            loc = np.nonzero(np.isin(self._keys[s], aff_keys,
+                                     assume_unique=True))[0]
+            if loc.size == 0:
+                continue
+            dirty.append(s)
+            sh = self._shards[s]
+            if touched_owner is not None:
+                # remember which shard owns each touched vertex's pairs —
+                # appeared pairs are assigned for locality from this map
+                gids = sh.pair_ids[loc]
+                for u in np.intersect1d(
+                        np.concatenate([self._space.pair_u[gids],
+                                        self._space.pair_v[gids]]),
+                        touched).tolist():
+                    touched_owner.setdefault(int(u), s)
+            ba, bm = base_for_pairs(sh.space, loc)
+            base_asym += ba
+            base_mut += bm
+            streams.append(self._job_stream(s, loc))
+        hist = np.zeros(64, np.int64)
+        inter = np.zeros(2, np.int64)
+        self._drain(streams, hist, inter, chunk_items, shard_items)
+        return contribution_counts(base_asym, base_mut, hist, inter), \
+            dirty
+
+    def update(self, add_src=None, add_dst=None,
+               del_src=None, del_dst=None) -> np.ndarray:
+        """Apply an edge delta and return the edited graph's census.
+
+        Only the shards owning affected pairs recount (old contribution
+        on their still-resident arrays, new contribution after refresh);
+        every other shard keeps its device buffers untouched and
+        dispatches nothing.  Bit-identical to a from-scratch census."""
+        if self._census is None:
+            raise RuntimeError(
+                "no baseline census: call census() before update()")
+        cache0 = self._cache_size()
+        g_new, delta = apply_delta(self._g, add_src, add_dst,
+                                   del_src, del_dst)
+        self.last_delta = delta
+        if delta.num_changed == 0:
+            self._set_stats([], [0] * self.ndev, 0,
+                            self._postprune_items(), 0,
+                            self._cache_size() - cache0)
+            return self._census.copy()
+
+        n = self.n
+        space_old = self._space
+        aff_old = affected_pair_ids(space_old, delta.touched)
+        aff_keys_old = (space_old.pair_u * n + space_old.pair_v)[aff_old]
+        chunk_items: list[int] = []
+        shard_items = [0] * self.ndev
+        touched_owner: dict[int, int] = {}
+        contrib_old, dirty_old = self._recount(
+            aff_keys_old, chunk_items, shard_items,
+            touched_owner=touched_owner, touched=delta.touched)
+
+        # ---- reassign ownership and refresh only the dirty shards
+        self._g = g_new
+        space_new = pair_space(g_new, orient=self.orient,
+                               prune_self=self.prune_self)
+        self._space = space_new
+        self._full_items = None
+        key_all_new = space_new.pair_u * n + space_new.pair_v
+        dkeys = delta.pair_lo * n + delta.pair_hi
+        vanished = dkeys[delta.new_code == 0]
+        appeared = dkeys[delta.old_code == 0]
+        dirty = set(dirty_old)
+        if vanished.size:
+            for s in dirty_old:     # vanished pairs were affected-old
+                self._keys[s] = np.setdiff1d(self._keys[s], vanished,
+                                             assume_unique=True)
+        if appeared.size:
+            pending: dict[int, list[int]] = {}
+            # locality first — an appeared pair joins the shard already
+            # owning its endpoints' pairs — but only while that shard is
+            # within 1.25x of the mean load; past it, spill to the
+            # lightest shard so sustained churn cannot concentrate the
+            # whole pair space onto one device
+            cap = 1.25 * (sum(self._load) / self.ndev) + 1.0
+            for k in appeared.tolist():
+                u, v = divmod(k, n)
+                s = touched_owner.get(u, touched_owner.get(v))
+                if s is None or self._load[s] > cap:
+                    s = int(np.argmin(self._load))
+                touched_owner.setdefault(u, s)
+                touched_owner.setdefault(v, s)
+                idx = int(np.searchsorted(key_all_new, k))
+                self._load[s] += int(space_new.counts[idx])
+                pending.setdefault(s, []).append(k)
+            for s, ks in pending.items():
+                self._keys[s] = np.union1d(self._keys[s],
+                                           np.asarray(ks, np.int64))
+                dirty.add(s)
+        # one global cost scan shared by every dirty shard's refresh
+        # (extract_shard would otherwise recount it per shard)
+        costs_new = postprune_pair_counts(space_new)
+        for s in sorted(dirty):
+            ids = np.searchsorted(key_all_new, self._keys[s])
+            self._shards[s] = extract_shard(space_new, ids, index=s,
+                                            costs=costs_new)
+            self._load[s] = self._shards[s].items
+        self._upload_shards(sorted(dirty))
+
+        # ---- new-side recount (owners of every affected new pair are,
+        # by construction, in the refreshed dirty set)
+        aff_new = affected_pair_ids(space_new, delta.touched)
+        aff_keys_new = key_all_new[aff_new]
+        contrib_new, _ = self._recount(
+            aff_keys_new, chunk_items, shard_items)
+        self._census = combine(self._census, contrib_old, contrib_new,
+                               self.n)
+        self._set_stats(chunk_items, shard_items,
+                        int(sum(chunk_items)),
                         self._postprune_items(),
                         int(aff_old.shape[0] + aff_new.shape[0]),
                         self._cache_size() - cache0)

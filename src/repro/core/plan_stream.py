@@ -25,6 +25,11 @@ Key properties:
   the same ``chunk_shape`` (``max_items`` rounded up to ``pad_to``), so the
   per-chunk device step compiles once (see
   :class:`repro.core.engine.CensusEngine`).
+* **Per-shard chunking.**  A :class:`PlanChunker` can be opened on a
+  prebuilt pair space (``space=``) — one graph shard's local space — and
+  :class:`ShardSchedule` locks several such per-shard streams into one
+  compile-once collective geometry for the partitioned engine
+  (:mod:`repro.core.partition`).
 """
 
 from __future__ import annotations
@@ -71,15 +76,20 @@ class PlanChunker:
     ``prune_self`` match :func:`repro.core.planner.build_plan`.
     """
 
-    def __init__(self, g: CompactDigraph, max_items: int | None,
+    def __init__(self, g: CompactDigraph | None, max_items: int | None,
                  orient: str = "none", pad_to: int = 1,
-                 prune_self: bool = True):
+                 prune_self: bool = True, *,
+                 space: PairSpace | None = None):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
         if pad_to < 1:
             raise ValueError(f"pad_to must be >= 1, got {pad_to}")
-        self.space: PairSpace = pair_space(g, orient=orient,
-                                           prune_self=prune_self)
+        #: a prebuilt ``space`` (e.g. one shard's local pair space from
+        #: :mod:`repro.core.partition`) bypasses the graph decomposition —
+        #: the per-shard chunker; ``orient``/``prune_self`` are then the
+        #: space's own
+        self.space: PairSpace = space if space is not None else \
+            pair_space(g, orient=orient, prune_self=prune_self)
         w_pre = self.space.num_items_preprune
         #: ``max_items=None`` covers the whole item space as one chunk —
         #: the monolithic schedule expressed in chunker terms (used by the
@@ -161,6 +171,85 @@ class PlanChunker:
     def __iter__(self) -> Iterator[PlanChunk]:
         for k in range(self.num_chunks):
             yield self.chunk(k)
+
+
+class ShardSchedule:
+    """Lock-step per-shard chunk schedules under one compile-once geometry.
+
+    The partitioned engine gives every device a *private* stream: shard s
+    walks its own item space in windows of ``chunk_shape`` pre-prune
+    items.  This schedule locks the per-shard :class:`PlanChunker`
+    geometries together — one common ``chunk_shape`` (the per-device slice
+    of ``max_items``), one common ``desc_shape`` (the widest pair span any
+    shard's window can have) and one common step count (the longest
+    shard's; shorter shards pad with empty windows) — so a single
+    fixed-shape collective dispatch per step advances every device's own
+    queue, and the jitted step compiles exactly once.
+    """
+
+    def __init__(self, spaces, max_items: int | None, num_devices: int):
+        if max_items is not None and max_items < 1:
+            raise ValueError(f"max_items must be >= 1, got {max_items}")
+        self.spaces = list(spaces)
+        w_max = max((s.num_items_preprune for s in self.spaces), default=0)
+        budget = (-(-int(max_items) // num_devices)
+                  if max_items is not None else max(w_max, 1))
+        self.max_items = max_items
+        #: fixed per-DEVICE dispatch lanes (each device expands/processes
+        #: its own ``chunk_shape`` item window per step)
+        self.chunk_shape = max(min(budget, max(w_max, 1)), 1)
+        if self.chunk_shape >= 2**31:
+            raise ValueError(
+                "chunk exceeds int32 item indexing; pass a smaller "
+                "max_items budget")
+        self.num_steps = max(
+            (-(-s.num_items_preprune // self.chunk_shape)
+             for s in self.spaces), default=0)
+        self.desc_shape = max(
+            max_pairs_per_window(s.offsets, self.chunk_shape)
+            for s in self.spaces) if self.spaces else 1
+        self.desc_iters = DESC_SEARCH_ITERS
+        self.num_anchors = num_desc_anchors(self.chunk_shape)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.spaces)
+
+    def _bounds(self, s: int, k: int) -> tuple[int, int]:
+        """Item window [lo, hi) of shard ``s`` at step ``k`` — empty (at
+        the space's end) once the shard's own queue is exhausted."""
+        total = self.spaces[s].num_items_preprune
+        lo = min(k * self.chunk_shape, total)
+        return lo, min(lo + self.chunk_shape, total)
+
+    def descriptors(self, s: int, k: int) -> DescriptorWindow:
+        """Shard ``s``'s descriptor window at step ``k`` (possibly empty)."""
+        lo, hi = self._bounds(s, k)
+        return descriptor_window(self.spaces[s].offsets, lo, hi,
+                                 self.desc_shape, self.num_anchors)
+
+    def step_words(self, k: int) -> np.ndarray:
+        """All shards' step-``k`` windows as one (num_shards, words) int32
+        buffer — the sharded per-step upload of the device-emission path."""
+        return np.stack([self.descriptors(s, k).device_words()
+                         for s in range(self.num_shards)])
+
+    def step_items(self, k: int
+                   ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+        """All shards' step-``k`` packed item windows, stacked
+        (num_shards, chunk_shape), plus per-shard valid item counts — the
+        host-emission twin of :meth:`step_words`."""
+        sps, pvs, nums = [], [], []
+        for s in range(self.num_shards):
+            lo, hi = self._bounds(s, k)
+            item_pair, item_slot, item_side = emit_items(
+                self.spaces[s], lo, hi)
+            nums.append(int(item_pair.shape[0]))
+            sp, pv = pad_and_pack(item_pair, item_slot, item_side,
+                                  self.chunk_shape)
+            sps.append(sp)
+            pvs.append(pv)
+        return np.stack(sps), np.stack(pvs), nums
 
 
 def iter_plan_chunks(g: CompactDigraph, max_items: int,

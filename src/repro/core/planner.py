@@ -20,6 +20,11 @@ materialized at once:
   :func:`base_for_pairs` gives the matching subset-additive closed-form
   bases — the pieces the incremental census
   (:mod:`repro.core.incremental`) diffs affected pairs with.
+* :func:`make_pair_space` assembles a :class:`PairSpace` from an explicit
+  pair sequence over any CSR — the shard-aware slicing hook the graph
+  partitioner (:mod:`repro.core.partition`) builds per-device local
+  spaces with — and :func:`postprune_pair_counts` gives the exact
+  per-pair work-item costs its LPT balances.
 * :func:`descriptor_window` compresses any window of the item space into
   O(pairs) *descriptors* (:class:`DescriptorWindow`) from which the
   device expands items itself
@@ -125,35 +130,11 @@ class PairSpace:
         return int(self.offsets[-1])
 
     def num_items_postprune(self) -> int:
-        """Exact post-prune work-item count W without emitting any items.
-
-        The closed form per pair: with self-pruning each pair loses its
-        two guaranteed self-items; with degree orientation the witness
-        side keeps its ``deg - 1`` non-self items while the other side
-        keeps only the entries past the co-endpoint in its sorted row
-        (the plan-time canonical predicate) — both countable from the CSR
-        in O(P log m) via the globally sorted entry keys.
-        """
+        """Exact post-prune work-item count W without emitting any items
+        (the sum of :func:`postprune_pair_counts`)."""
         if self.num_pairs == 0:
             return 0
-        if self.orient != "degree":
-            w0 = int(self.offsets[-1])
-            return w0 - 2 * self.num_pairs if self.prune_self else w0
-        rows = np.repeat(np.arange(self.n, dtype=np.int64),
-                         self.deg.astype(np.int64))
-        entry_key = rows * self.n + self.nbr.astype(np.int64)
-        pos_v_in_u = (np.searchsorted(entry_key,
-                                      self.pair_u * self.n + self.pair_v)
-                      - self.indptr[self.pair_u])
-        pos_u_in_v = (np.searchsorted(entry_key,
-                                      self.pair_v * self.n + self.pair_u)
-                      - self.indptr[self.pair_v])
-        deg_u = self.deg[self.pair_u].astype(np.int64)
-        deg_v = self.deg[self.pair_v].astype(np.int64)
-        inter = (self.pair_code >> INTER_SIDE_BIT) & 1
-        side0 = np.where(inter == 0, deg_u - 1, deg_u - pos_v_in_u - 1)
-        side1 = np.where(inter == 1, deg_v - 1, deg_v - pos_u_in_v - 1)
-        return int((side0 + side1).sum())
+        return int(postprune_pair_counts(self).sum())
 
     def base_slices(self, starts: np.ndarray) -> tuple[np.ndarray,
                                                        np.ndarray]:
@@ -175,26 +156,33 @@ class PairSpace:
         return asym, mut
 
 
-def pair_space(g: CompactDigraph, orient: str = "none",
-               prune_self: bool = True) -> PairSpace:
-    """Build the O(pairs) pair decomposition for ``g`` (no items yet)."""
+def make_pair_space(g: CompactDigraph, pair_u: np.ndarray,
+                    pair_v: np.ndarray, pair_code: np.ndarray, *,
+                    orient: str, prune_self: bool = True,
+                    pair_term: np.ndarray | None = None) -> PairSpace:
+    """Assemble a :class:`PairSpace` over ``g`` from an explicit canonical
+    -pair sequence — the shard-aware constructor behind :func:`pair_space`
+    (which passes the full canonical decomposition) and
+    :mod:`repro.core.partition` (which passes one shard's pairs over its
+    relabeled local subgraph).
+
+    ``pair_code`` is taken as given — including any degree-orientation
+    inter-side bits already stamped on it — so a pair sliced out of a
+    larger space keeps the exact plan policy it had there.  ``pair_term``
+    overrides the closed-form dyadic terms; a shard passes the *global*
+    ``n - deg_u - deg_v`` values so per-shard bases stay additive to the
+    global ones (the local ``n`` would be wrong for the complement).
+    """
     if orient not in ("none", "degree"):
         raise ValueError(f"unknown orient mode {orient!r}")
-    n = g.n
     indptr, packed = g.indptr, g.packed
-    nbr = packed >> 2
     deg = g.degrees
-
-    # canonical pairs: CSR entries with nbr > row
-    pair_u, pair_v, pair_code = canonical_pairs(g)
-    pair_code = pair_code.astype(np.int32)
+    pair_u = np.asarray(pair_u, dtype=np.int64)
+    pair_v = np.asarray(pair_v, dtype=np.int64)
+    pair_code = np.asarray(pair_code, dtype=np.int32)
     num_pairs = pair_u.shape[0]
 
     deg_u, deg_v = deg[pair_u], deg[pair_v]
-    if orient == "degree" and num_pairs:
-        inter_side = (deg_v < deg_u).astype(np.int32)
-        pair_code = pair_code | (inter_side << INTER_SIDE_BIT)
-
     counts = (deg_u + deg_v).astype(np.int64)
     offsets = np.zeros(num_pairs + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
@@ -204,15 +192,66 @@ def pair_space(g: CompactDigraph, orient: str = "none",
         raise ValueError("graph exceeds int32 packed-item indexing "
                          "(need slots < 2**30); shard the graph first")
 
-    max_deg = int(deg.max()) if n else 0
+    if pair_term is None:
+        pair_term = (g.n - deg_u - deg_v).astype(np.int64)
+    max_deg = int(deg.max()) if g.n else 0
     return PairSpace(
-        n=n, orient=orient, prune_self=prune_self, max_degree=max_deg,
+        n=g.n, orient=orient, prune_self=prune_self, max_degree=max_deg,
         search_iters=max(1, int(np.ceil(np.log2(max_deg + 1)))),
-        indptr=indptr, packed=packed, nbr=nbr, deg=deg,
+        indptr=indptr, packed=packed, nbr=packed >> 2, deg=deg,
         pair_u=pair_u, pair_v=pair_v, pair_code=pair_code,
         counts=counts, offsets=offsets,
-        pair_term=(n - deg_u - deg_v).astype(np.int64),
+        pair_term=np.asarray(pair_term, dtype=np.int64),
         pair_mut=(pair_code & 3) == 3)
+
+
+def pair_space(g: CompactDigraph, orient: str = "none",
+               prune_self: bool = True) -> PairSpace:
+    """Build the O(pairs) pair decomposition for ``g`` (no items yet)."""
+    if orient not in ("none", "degree"):
+        raise ValueError(f"unknown orient mode {orient!r}")
+    # canonical pairs: CSR entries with nbr > row
+    pair_u, pair_v, pair_code = canonical_pairs(g)
+    pair_code = pair_code.astype(np.int32)
+    if orient == "degree" and pair_u.shape[0]:
+        deg = g.degrees
+        inter_side = (deg[pair_v] < deg[pair_u]).astype(np.int32)
+        pair_code = pair_code | (inter_side << INTER_SIDE_BIT)
+    return make_pair_space(g, pair_u, pair_v, pair_code, orient=orient,
+                           prune_self=prune_self)
+
+
+def postprune_pair_counts(space: PairSpace) -> np.ndarray:
+    """Exact post-prune work items per pair, (P,) int64, without emitting.
+
+    The closed form per pair: with self-pruning each pair loses its two
+    guaranteed self-items; with degree orientation the witness side keeps
+    its ``deg - 1`` non-self items while the other side keeps only the
+    entries past the co-endpoint in its sorted row (the plan-time
+    canonical predicate) — both countable from the CSR in O(P log m) via
+    the globally sorted entry keys.  This is both the exact-W closed form
+    (:meth:`PairSpace.num_items_postprune`) and the per-pair cost vector
+    the partitioner's LPT balances (:mod:`repro.core.partition`).
+    """
+    if space.num_pairs == 0:
+        return np.zeros(0, dtype=np.int64)
+    if space.orient != "degree":
+        return space.counts - (2 if space.prune_self else 0)
+    rows = np.repeat(np.arange(space.n, dtype=np.int64),
+                     space.deg.astype(np.int64))
+    entry_key = rows * space.n + space.nbr.astype(np.int64)
+    pos_v_in_u = (np.searchsorted(entry_key,
+                                  space.pair_u * space.n + space.pair_v)
+                  - space.indptr[space.pair_u])
+    pos_u_in_v = (np.searchsorted(entry_key,
+                                  space.pair_v * space.n + space.pair_u)
+                  - space.indptr[space.pair_v])
+    deg_u = space.deg[space.pair_u].astype(np.int64)
+    deg_v = space.deg[space.pair_v].astype(np.int64)
+    inter = (space.pair_code >> INTER_SIDE_BIT) & 1
+    side0 = np.where(inter == 0, deg_u - 1, deg_u - pos_v_in_u - 1)
+    side1 = np.where(inter == 1, deg_v - 1, deg_v - pos_u_in_v - 1)
+    return side0 + side1
 
 
 def emit_items(space: PairSpace, lo: int, hi: int

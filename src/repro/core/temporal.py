@@ -34,6 +34,12 @@ incremental path changes the work done, never the counts — and processes
 O(affected) work items instead of the window's full O(W)
 (`tests/test_temporal.py`, `benchmarks/check.sh --temporal-smoke`).
 
+With ``partition=True`` (and a mesh) the session shards each window's
+graph itself: every device holds only its pair shard's local subgraph,
+and a sliding-window delta dispatches only the shards owning affected
+pairs — the other devices' buffers are never touched
+(:mod:`repro.core.partition`).
+
 Anomaly detection uses robust statistics (median + MAD over the trailing
 ``history`` windows) so an ongoing attack does not poison its own
 baseline; per-window proportions and alarm verdicts are cached
@@ -93,6 +99,13 @@ class TriadMonitor:
     backend / mesh / orient / max_items : engine routing — every window's
         census runs on this backend (optionally sharded over ``mesh``)
         through one resident :class:`~repro.core.engine.EngineSession`.
+    partition : shard each window's GRAPH across the mesh instead of
+        replicating it — every device holds only its pair shard's local
+        subgraph, sliding-window deltas dispatch only the owning shards
+        (:class:`~repro.core.engine.PartitionedEngineSession`), and the
+        per-window :class:`~repro.core.engine.EngineStats` carry the
+        shard balance/residency report.  Requires ``mesh``; censuses are
+        bit-identical either way.
     incremental : delta-update overlapping windows instead of recomputing
         them from scratch (bit-identical either way).
     emit : work-item emission mode for every window census and delta
@@ -107,7 +120,8 @@ class TriadMonitor:
                  mesh=None, orient: str = "none",
                  incremental: bool = True,
                  max_items: int | None = None,
-                 emit: str | None = None):
+                 emit: str | None = None,
+                 partition: bool = False):
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
         if window < 1:
@@ -130,7 +144,8 @@ class TriadMonitor:
         self.orient = orient
         self.max_items = max_items
         self.emit = emit
-        self.engine = CensusEngine(mesh=mesh, backend=backend)
+        self.engine = CensusEngine(mesh=mesh, backend=backend,
+                                   partition=partition)
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
         self._arcset: np.ndarray | None = None      # current window's arcs
