@@ -425,7 +425,7 @@ def partitioned_scaling(rows: list):
                  f"items={repl.stats.items}"))
     for shards in (1, 4, 8):
         engine = CensusEngine(mesh=default_mesh(shards), backend="jnp",
-                              partition=True)
+                              partition=True, schedule="lockstep")
         got = engine.run(g)
         if not (got == want).all():
             raise AssertionError(
@@ -439,6 +439,119 @@ def partitioned_scaling(rows: list):
             f"reduction="
             f"{st.graph_replicated_bytes / max(st.graph_resident_bytes, 1):.2f}x;"
             f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
+    # async per-shard streams on the same workload: no inter-shard
+    # barrier, per-shard chunk queues drained independently
+    for shards in (4, 8):
+        engine = CensusEngine(mesh=default_mesh(shards), backend="jnp",
+                              partition=True, schedule="async")
+        got = engine.run(g)
+        if not (got == want).all():
+            raise AssertionError(
+                f"async partitioned census mismatch at {shards} shards")
+        dt, _ = _timeit(engine.run, g)
+        st = engine.stats
+        rows.append((
+            f"part_async_shard{shards}", dt * 1e6,
+            f"windows={sum(st.shard_steps)};"
+            f"stalls={st.stall_steps};"
+            f"pipeline_depth={st.pipeline_depth};"
+            f"upload_bytes={st.plan_upload_bytes_total};"
+            f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
+
+
+def _skewed_partition(space, num_shards: int, frac: float):
+    """Deliberately imbalanced partition: shard 0 takes the heaviest
+    pairs up to ``frac`` of the total pre-prune work (so its chunk queue
+    is ``frac * num_shards``× the mean); the rest LPT-balance across the
+    remaining shards."""
+    from repro.core import lpt_assign_heap, partition_graph
+
+    costs = space.counts.astype(np.int64)
+    order = np.argsort(-costs, kind="stable")
+    csum = np.cumsum(costs[order])
+    k = int(np.searchsorted(csum, int(costs.sum() * frac))) + 1
+    owner = np.empty(space.num_pairs, np.int64)
+    owner[order[:k]] = 0
+    rest = order[k:]
+    owner[rest] = 1 + lpt_assign_heap(costs[rest], num_shards - 1)
+    return partition_graph(num_shards=num_shards, space=space,
+                           owner=owner)
+
+
+def async_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --async-smoke): on a synthetic
+    4×-skewed 8-shard partition (the heaviest shard's chunk queue ≥ 4×
+    the mean) the async schedule must
+
+    * stay bit-identical to the lock-step oracle AND the single-device
+      census,
+    * run ≥ 1.5× faster than lock-step (which burns ndev × max-shard
+      collective steps, padded windows included), and
+    * land within 1.25× of the mean-shard ideal — the same async engine
+      on a balanced LPT partition of the same graph (same per-window
+      dispatch cost, so the ratio isolates the skew penalty the barrier
+      drop is supposed to erase).
+    """
+    import jax
+
+    from repro.core import (CensusEngine, default_mesh, pair_space,
+                            partition_graph, scale_free_digraph)
+    from repro.core.plan_stream import ShardSchedule
+
+    if len(jax.devices()) < 8:
+        raise AssertionError(
+            f"async smoke needs 8 devices, have {len(jax.devices())} "
+            "(run via benchmarks/run.py, which forces them)")
+    g = scale_free_digraph(1500, 8.0, 2.1, seed=0)
+    space = pair_space(g)
+    want = CensusEngine(backend="jnp").run(g)
+    max_items = 16_384
+    part_skew = _skewed_partition(space, 8, 0.52)
+    part_bal = partition_graph(num_shards=8, space=space)
+    sched = ShardSchedule([sh.space for sh in part_skew.shards],
+                          max_items, 8)
+    steps = sched.shard_steps
+    skew = max(steps) / (sum(steps) / len(steps))
+    if skew < 4.0:
+        raise AssertionError(
+            f"synthetic skew too mild: heaviest/mean {skew:.2f} < 4")
+    mesh = default_mesh(8)
+
+    def run_once(schedule, part):
+        engine = CensusEngine(mesh=mesh, backend="jnp",
+                              partition=True, schedule=schedule)
+        dt, got = _timeit(engine.run, g, max_items=max_items, part=part,
+                          reps=2)
+        if not (got == want).all():
+            raise AssertionError(
+                f"{schedule} partitioned census != single-device")
+        return dt, engine.stats
+
+    t_async, st_a = run_once("async", part_skew)
+    t_lock, st_l = run_once("lockstep", part_skew)
+    t_ideal, st_i = run_once("async", part_bal)
+    speedup = t_lock / t_async
+    if speedup < 1.5:
+        raise AssertionError(
+            f"async only {speedup:.2f}x faster than lock-step on the "
+            f"4x skew (need >= 1.5x)")
+    if t_async > 1.25 * t_ideal:
+        raise AssertionError(
+            f"async on the skew is {t_async / t_ideal:.2f}x the "
+            "balanced mean-shard ideal (need <= 1.25x)")
+    rows.append(("async_smoke_skew", t_async * 1e6,
+                 f"speedup_vs_lockstep={speedup:.2f}x;"
+                 f"vs_mean_ideal={t_async / t_ideal:.2f}x;"
+                 f"heaviest_over_mean={skew:.2f};"
+                 f"windows={sum(st_a.shard_steps)};"
+                 f"stalls={st_a.stall_steps};parity=ok"))
+    rows.append(("async_smoke_lockstep", t_lock * 1e6,
+                 f"collective_steps={max(st_l.shard_steps)};"
+                 f"idle_steps={st_l.idle_steps};parity=ok"))
+    rows.append(("async_smoke_ideal", t_ideal * 1e6,
+                 f"windows={sum(st_i.shard_steps)};"
+                 f"shard_max_over_mean="
+                 f"{st_i.shard_max_over_mean:.3f};parity=ok"))
 
 
 def partition_smoke(rows: list):

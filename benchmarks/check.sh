@@ -27,6 +27,15 @@
 # — full streamed runs and incremental session updates — while shipping
 # >= 4x fewer host→device plan bytes per chunk on both paths.
 #
+# The async smoke (benchmarks/run.py --async-smoke) runs the partitioned
+# engine's async per-shard schedule on a synthetic 4x-skewed 8-shard
+# partition (heaviest shard's chunk queue >= 4x the mean) and asserts
+# bit-identity vs both the lock-step oracle and the single-device census,
+# >= 1.5x walltime speedup over lock-step, and walltime within 1.25x of
+# the balanced mean-shard ideal — so dropping the inter-shard barrier
+# keeps paying for itself and can never silently regress to max-shard
+# pacing.
+#
 # The partition smoke (benchmarks/run.py --partition-smoke) runs the
 # partitioned engine — each device of an 8-virtual-host mesh holds only
 # its pair shard's relabeled local subgraph and walks its own descriptor
@@ -58,3 +67,6 @@ python -m benchmarks.run --emit-smoke
 
 echo "== partition smoke (sharded graph == single device, >= 2x fewer graph bytes) =="
 python -m benchmarks.run --partition-smoke
+
+echo "== async smoke (per-shard streams == lock-step, >= 1.5x on 4x skew) =="
+python -m benchmarks.run --async-smoke

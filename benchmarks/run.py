@@ -51,6 +51,12 @@ def main() -> None:
                          "the single-device path on an 8-virtual-host "
                          "mesh, shard imbalance <= 1.2, >= 2x per-device "
                          "graph-byte reduction")
+    ap.add_argument("--async-smoke", action="store_true",
+                    help="async-schedule gate: on a synthetic 4x-skewed "
+                         "8-shard partition, async per-shard streams "
+                         "must be bit-identical to the lock-step "
+                         "oracle, >= 1.5x faster, and within 1.25x of "
+                         "the balanced mean-shard ideal")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as machine-readable JSON "
                          "(name, us_per_call, derived, backend), e.g. "
@@ -71,7 +77,9 @@ def main() -> None:
 
     rows: list = []
     from benchmarks import census_bench
-    if args.partition_smoke:
+    if args.async_smoke:
+        census_bench.async_smoke(rows)
+    elif args.partition_smoke:
         census_bench.partition_smoke(rows)
     elif args.emit_smoke:
         census_bench.emit_smoke(rows)

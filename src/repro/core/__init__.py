@@ -23,6 +23,11 @@ Public API::
     engine = CensusEngine(mesh, backend="pallas-fused", partition=True)
     census = engine.run(g)            # bit-identical, private shards
     session = engine.session(g)       # deltas dispatch owning shards only
+
+    # partitioned runs drain per-shard streams asynchronously (no
+    # inter-shard barrier; walltime tracks the MEAN shard, not the max);
+    # schedule="lockstep" keeps the collective barrier as the oracle
+    census = engine.run(g, schedule="lockstep")
 """
 
 from repro.core.digraph import (
@@ -33,17 +38,19 @@ from repro.core.planner import (
     descriptor_window, emit_items, emit_items_for_pairs,
     iter_descriptor_windows, pack_items, pair_space, unpack_items)
 from repro.core.plan_stream import (
-    PlanChunk, PlanChunker, ShardSchedule, iter_plan_chunks)
+    PlanChunk, PlanChunker, ShardSchedule, ShardStreamPipeline,
+    iter_plan_chunks)
 from repro.core.census import triad_census, assemble_census
 from repro.core.engine import (
-    CensusEngine, EMIT_MODES, EngineSession, EngineStats,
+    CensusEngine, EMIT_MODES, SCHEDULES, EngineSession, EngineStats,
     PartitionedEngineSession)
 from repro.core.incremental import (
     affected_pair_ids, subset_contribution, subset_descriptor_windows,
     verify_delta_closure)
 from repro.core.partition import (
     GraphPartition, LocalShard, PartitionStats, extract_shard,
-    lpt_assign, partition_graph, replicated_graph_bytes)
+    lpt_assign, lpt_assign_heap, partition_graph,
+    replicated_graph_bytes)
 from repro.core.distributed import (
     shard_report, triad_census_distributed, triad_census_graph,
     default_mesh)
@@ -63,13 +70,15 @@ __all__ = [
     "build_plan", "descriptor_window", "emit_items",
     "emit_items_for_pairs", "iter_descriptor_windows", "pack_items",
     "pair_space", "unpack_items",
-    "PlanChunk", "PlanChunker", "ShardSchedule", "iter_plan_chunks",
-    "CensusEngine", "EMIT_MODES", "EngineSession", "EngineStats",
-    "PartitionedEngineSession",
+    "PlanChunk", "PlanChunker", "ShardSchedule", "ShardStreamPipeline",
+    "iter_plan_chunks",
+    "CensusEngine", "EMIT_MODES", "SCHEDULES", "EngineSession",
+    "EngineStats", "PartitionedEngineSession",
     "affected_pair_ids", "subset_contribution",
     "subset_descriptor_windows", "verify_delta_closure",
     "GraphPartition", "LocalShard", "PartitionStats", "extract_shard",
-    "lpt_assign", "partition_graph", "replicated_graph_bytes",
+    "lpt_assign", "lpt_assign_heap", "partition_graph",
+    "replicated_graph_bytes",
     "shard_report",
     "triad_census", "assemble_census",
     "triad_census_distributed", "triad_census_graph", "default_mesh",

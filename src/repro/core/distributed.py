@@ -43,14 +43,15 @@ from jax.sharding import Mesh
 from repro.core.digraph import CompactDigraph
 from repro.core.partition import (
     GraphPartition, LocalShard, PartitionStats, extract_shard,
-    graph_bytes, lpt_assign, partition_graph, replicated_graph_bytes)
+    graph_bytes, lpt_assign, lpt_assign_heap, partition_graph,
+    replicated_graph_bytes)
 from repro.core.planner import CensusPlan
 
 __all__ = [
     "GraphPartition", "LocalShard", "PartitionStats", "default_mesh",
-    "extract_shard", "graph_bytes", "lpt_assign", "partition_graph",
-    "replicated_graph_bytes", "shard_report", "triad_census_distributed",
-    "triad_census_graph",
+    "extract_shard", "graph_bytes", "lpt_assign", "lpt_assign_heap",
+    "partition_graph", "replicated_graph_bytes", "shard_report",
+    "triad_census_distributed", "triad_census_graph",
 ]
 
 
@@ -93,7 +94,8 @@ def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
                        max_items: int | None = None,
                        progress=None,
                        emit: str | None = None,
-                       partition: bool = False) -> np.ndarray:
+                       partition: bool = False,
+                       schedule: str = "async") -> np.ndarray:
     """Convenience: plan + distribute + count in one call.
 
     ``max_items=None`` reproduces the historical one-dispatch schedule;
@@ -102,12 +104,15 @@ def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
     upload + in-kernel pair→item expansion; ``"host"``: packed-item
     upload).  ``partition=True`` shards the GRAPH across the mesh — each
     device holds only its pair shard's local subgraph and walks its own
-    stream (:mod:`repro.core.partition`).  Bit-identical on every
-    combination.
+    stream (:mod:`repro.core.partition`); ``schedule`` then picks the
+    execution discipline (``"async"``: private per-shard streams, no
+    inter-shard barrier; ``"lockstep"``: the collective oracle).
+    Bit-identical on every combination.
     """
     from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
-    engine = CensusEngine(mesh=mesh, backend=backend, partition=partition)
+    engine = CensusEngine(mesh=mesh, backend=backend,
+                          partition=partition, schedule=schedule)
     return engine.run(g, max_items=max_items, orient=orient,
                       progress=progress, emit=emit)

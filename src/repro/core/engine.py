@@ -89,13 +89,26 @@ from repro.core.planner import (
     build_plan, emit_items, emit_items_for_pairs, global_bases,
     iter_descriptor_windows, max_pairs_per_window, num_desc_anchors,
     pad_and_pack, pair_space, postprune_pair_counts)
-from repro.core.plan_stream import PlanChunker, ShardSchedule
+from repro.core.plan_stream import (
+    PlanChunker, ShardSchedule, ShardStreamPipeline)
 
 #: work-item emission modes: ``device`` streams O(pairs) descriptors and
 #: expands pairs→items in-kernel (the default); ``host`` materializes and
 #: uploads every packed item in numpy (the original path, kept as the
 #: oracle and for prebuilt monolithic plans)
 EMIT_MODES = ("device", "host")
+
+#: partitioned execution disciplines: ``async`` (the default) walks each
+#: shard's private chunk queue independently — per-device dispatches, no
+#: inter-shard barrier, background per-shard window producers — so
+#: walltime tracks the MEAN shard cost; ``lockstep`` advances every
+#: shard's queue together through one collective dispatch per step (the
+#: slowest shard gates each step) and is kept as the bit-identity oracle
+SCHEDULES = ("async", "lockstep")
+
+#: per-shard produced-window queue depth of the async host pipeline
+#: (2 == double-buffering: one window in flight, one pre-built behind it)
+PIPELINE_DEPTH = 2
 
 
 def _chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
@@ -378,6 +391,26 @@ class EngineStats:
     #: to it on un-partitioned runs, ≥ it (the byte-reduction numerator)
     #: on partitioned ones
     graph_replicated_bytes: int = 0
+    #: partitioned execution discipline ("async" or "lockstep"; "" when
+    #: not partitioned)
+    schedule: str = ""
+    #: per-shard REAL dispatch steps (windows carrying pre-prune items) —
+    #: identical between schedules; what differs is ``idle_steps``
+    shard_steps: list[int] = field(default_factory=list)
+    #: empty padded window lanes the lock-step barrier still dispatched
+    #: (``num_steps * ndev − Σ shard_steps``); structurally 0 under async
+    idle_steps: int = 0
+    #: async consumer stalls: moments every produced-window queue was
+    #: empty and the host had to wait on a producer (pipeline-bound)
+    stall_steps: int = 0
+    #: per-shard produced-window queue depth of the async host pipeline
+    pipeline_depth: int = 0
+    #: TOTAL host→device plan bytes shipped over the whole run, summed
+    #: across devices and dispatches (``plan_upload_bytes`` is the
+    #: per-device per-dispatch unit); under async each shard pays only
+    #: for its real windows, under lock-step every device ships a window
+    #: every step — padding included
+    plan_upload_bytes_total: int = 0
 
     @property
     def shard_max_over_mean(self) -> float:
@@ -400,10 +433,16 @@ class EngineStats:
                 else "monolithic")
         part = ""
         if self.partitioned:
-            part = (f" partitioned shards={len(self.shard_items)} "
+            part = (f" partitioned[{self.schedule}] "
+                    f"shards={len(self.shard_items)} "
                     f"shard_max_over_mean={self.shard_max_over_mean:.3f} "
                     f"graph_bytes={self.graph_resident_bytes}"
                     f"/{self.graph_replicated_bytes}")
+            if self.schedule == "async":
+                part += (f" stalls={self.stall_steps} "
+                         f"depth={self.pipeline_depth}")
+            else:
+                part += f" idle_steps={self.idle_steps}"
         return (f"{self.backend} [{mode} emit={self.emit}] "
                 f"chunks={self.chunks} items={self.items} "
                 f"peak_plan_bytes={self.peak_plan_bytes} "
@@ -432,13 +471,17 @@ class CensusEngine:
     """
 
     def __init__(self, mesh: Mesh | None = None, backend: str = "jnp",
-                 emit: str = "device", partition: bool = False):
+                 emit: str = "device", partition: bool = False,
+                 schedule: str = "async"):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
         if emit not in EMIT_MODES:
             raise ValueError(
                 f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        if schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; one of {SCHEDULES}")
         if partition:
             if mesh is None:
                 raise ValueError("partition=True requires a mesh")
@@ -450,6 +493,7 @@ class CensusEngine:
         self.backend = backend
         self.emit = emit
         self.partition = partition
+        self.schedule = schedule
         self.stats: EngineStats | None = None
 
     @property
@@ -523,7 +567,8 @@ class CensusEngine:
 
     def run(self, g: CompactDigraph, *, max_items: int | None = None,
             orient: str = "none", prune_self: bool = True,
-            progress=None, emit: str | None = None) -> np.ndarray:
+            progress=None, emit: str | None = None,
+            schedule: str | None = None, part=None) -> np.ndarray:
         """Plan + count ``g`` end to end.
 
         ``max_items=None`` covers the whole item space in one dispatch;
@@ -536,16 +581,31 @@ class CensusEngine:
         ``progress(chunk_index, num_chunks, chunk_valid_items)`` is called
         per chunk — at dispatch under host emission, when the chunk's
         device-counted valid items land under device emission.
+
+        Partitioned engines additionally accept ``schedule`` (default:
+        the engine's; ``"async"`` walks per-shard private queues with no
+        inter-shard barrier, ``"lockstep"`` is the collective oracle) and
+        ``part`` — a prebuilt :class:`repro.core.partition.GraphPartition`
+        over ``num_shards == ndev`` shards, overriding the internal LPT
+        (``orient``/``prune_self`` are then taken from its space).
         """
         emit = self.emit if emit is None else emit
         if emit not in EMIT_MODES:
             raise ValueError(
                 f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        schedule = self.schedule if schedule is None else schedule
+        if schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+        if part is not None and not self.partition:
+            raise ValueError(
+                "a prebuilt partition requires partition=True")
         if self.partition:
             return self._run_partitioned(g, max_items=max_items,
                                          orient=orient,
                                          prune_self=prune_self,
-                                         progress=progress, emit=emit)
+                                         progress=progress, emit=emit,
+                                         schedule=schedule, part=part)
         if emit == "device":
             chunker = PlanChunker(g, max_items, orient=orient,
                                   pad_to=self.ndev, prune_self=prune_self)
@@ -561,14 +621,27 @@ class CensusEngine:
 
     def session(self, g: CompactDigraph, *, orient: str = "none",
                 prune_self: bool = True, max_items: int | None = None,
-                emit: str | None = None):
+                emit: str | None = None,
+                auto_rebalance_threshold: float | None = None):
         """Open a resident-graph session on ``g`` for repeated / sliding-
         window censuses (see :class:`EngineSession`; a partitioned engine
         opens a :class:`PartitionedEngineSession`, whose delta updates
-        dispatch only the shards owning touched pairs)."""
-        cls = PartitionedEngineSession if self.partition else EngineSession
-        return cls(self, g, orient=orient, prune_self=prune_self,
-                   max_items=max_items, emit=emit)
+        dispatch only the shards owning touched pairs).
+        ``auto_rebalance_threshold`` (partitioned only) re-shards the
+        session with a fresh LPT whenever churn pushes the load
+        ``max/mean`` past it (see
+        :meth:`PartitionedEngineSession.rebalance`)."""
+        if self.partition:
+            return PartitionedEngineSession(
+                self, g, orient=orient, prune_self=prune_self,
+                max_items=max_items, emit=emit,
+                auto_rebalance_threshold=auto_rebalance_threshold)
+        if auto_rebalance_threshold is not None:
+            raise ValueError(
+                "auto_rebalance_threshold requires partition=True")
+        return EngineSession(self, g, orient=orient,
+                             prune_self=prune_self,
+                             max_items=max_items, emit=emit)
 
     def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
         space = chunker.space
@@ -711,28 +784,40 @@ class CensusEngine:
 
     def _run_partitioned(self, g: CompactDigraph, *,
                          max_items: int | None, orient: str,
-                         prune_self: bool, progress, emit: str
-                         ) -> np.ndarray:
-        """Partitioned plan + count: LPT-shard the pair space, extract one
-        local subgraph per mesh device, and advance every device's private
-        chunk queue in lock step through the compile-once collective step
-        (:class:`repro.core.plan_stream.ShardSchedule`).  Each device holds
-        only ITS shard's relabeled CSR + pair arrays; per step it receives
-        only its own descriptor window (``emit="device"``) or packed item
-        window (``emit="host"``), and the private histograms merge in the
-        single closing psum.  Bit-identical to the replicated and
-        single-device paths for every backend, orient and emit mode (the
-        relabeling is order-preserving, the pair partition is exact)."""
-        part = partition_graph(num_shards=self.ndev, space=pair_space(
-            g, orient=orient, prune_self=prune_self))
+                         prune_self: bool, progress, emit: str,
+                         schedule: str, part=None) -> np.ndarray:
+        """Partitioned plan + count: LPT-shard the pair space (or take a
+        prebuilt ``part``), extract one local subgraph per mesh device,
+        and walk every device's private chunk queue
+        (:class:`repro.core.plan_stream.ShardSchedule`).  Each device
+        holds only ITS shard's relabeled CSR + pair arrays and receives
+        only its own descriptor windows (``emit="device"``) or packed
+        item windows (``emit="host"``).  ``schedule="async"`` (default)
+        drains the queues independently — per-device dispatches, host
+        merge, no inter-shard barrier; ``"lockstep"`` advances them
+        together through the collective step with a single closing psum
+        (the oracle).  Bit-identical to the replicated and single-device
+        paths for every backend, orient, emit and schedule (the
+        relabeling is order-preserving, the pair partition is exact, and
+        the partials are integer sums — merge order cannot matter)."""
+        if part is None:
+            part = partition_graph(num_shards=self.ndev, space=pair_space(
+                g, orient=orient, prune_self=prune_self))
+        elif part.num_shards != self.ndev:
+            raise ValueError(
+                f"prebuilt partition has {part.num_shards} shards for "
+                f"{self.ndev} devices")
         space = part.space
         sched = ShardSchedule([sh.space for sh in part.shards],
                               max_items, self.ndev)
         upload = (4 * (1 + 3 * sched.desc_shape + sched.num_anchors)
                   if emit == "device"
                   else ITEM_BYTES * sched.chunk_shape)
+        if schedule == "async":
+            return self._run_partitioned_async(part, sched, progress,
+                                               emit, max_items, upload)
         self.stats = EngineStats(
-            backend=self.backend, ndev=self.ndev, orient=orient,
+            backend=self.backend, ndev=self.ndev, orient=space.orient,
             streamed=max_items is not None, max_items=max_items,
             chunks=sched.num_steps,
             chunk_shape=sched.chunk_shape * self.ndev,
@@ -743,7 +828,12 @@ class CensusEngine:
             plan_upload_bytes=upload, partitioned=True,
             shard_items=list(part.stats.shard_items),
             graph_resident_bytes=part.stats.max_shard_bytes,
-            graph_replicated_bytes=part.stats.replicated_bytes)
+            graph_replicated_bytes=part.stats.replicated_bytes,
+            schedule="lockstep", shard_steps=sched.shard_steps,
+            idle_steps=(sched.num_steps * self.ndev
+                        - sched.total_windows),
+            plan_upload_bytes_total=(sched.num_steps * self.ndev
+                                     * upload))
         base_asym, base_mut = global_bases(space)
         if sched.num_steps == 0:
             return assemble_counts(space.n, base_asym, base_mut,
@@ -805,6 +895,150 @@ class CensusEngine:
         st.chunk_items = chunk_items
         st.items = int(sum(chunk_items))
         mono_wp = -(-st.items // self.ndev) * self.ndev
+        st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
+        return assemble_counts(space.n, base_asym, base_mut,
+                               hist_acc, inter_acc)
+
+    def _run_partitioned_async(self, part, sched: ShardSchedule,
+                               progress, emit: str,
+                               max_items: int | None,
+                               upload: int) -> np.ndarray:
+        """Async per-shard streams: every device drains its PRIVATE chunk
+        queue with no inter-shard barrier.
+
+        Instead of one collective dispatch per lock step (where the
+        longest shard's queue gates every device, and exhausted shards
+        burn whole steps on empty padded windows), each shard's real
+        windows are dispatched as independent single-device steps against
+        per-device-committed shard buffers — the
+        :class:`PartitionedEngineSession` dispatch discipline applied to
+        the full run.  A shard with 3 chunks is done after 3 dispatches
+        while a 12-chunk shard keeps going, so walltime tracks the MEAN
+        shard cost, not the max.
+
+        The host side is pipelined by a
+        :class:`repro.core.plan_stream.ShardStreamPipeline`: one
+        background producer per shard packs descriptor windows / emits
+        item batches ``PIPELINE_DEPTH`` windows ahead into its private
+        queue, so window k+1's generation + upload overlaps window k's
+        compute; dispatches are async (futures) with a bounded in-flight
+        deque of ``2 * ndev``, keeping host + device plan memory
+        O(ndev · chunk_shape).  On accelerator platforms the packed item
+        buffers are donated (:func:`_chunk_step`), so the double-buffered
+        uploads reuse HBM.
+
+        Partials merge on the host in int64 — integer sums, so the
+        arbitrary landing order is bit-identical to the lock-step psum.
+        """
+        space = part.space
+        ndev = self.ndev
+        total_windows = sched.total_windows
+        self.stats = EngineStats(
+            backend=self.backend, ndev=ndev, orient=space.orient,
+            streamed=max_items is not None, max_items=max_items,
+            chunks=0, chunk_shape=sched.chunk_shape, items=0,
+            # the schedule-wide lane footprint (all devices), comparable
+            # with the lock-step record
+            peak_plan_bytes=ITEM_BYTES * sched.chunk_shape * ndev,
+            emit=emit,
+            desc_shape=sched.desc_shape if emit == "device" else 0,
+            plan_upload_bytes=upload, partitioned=True,
+            shard_items=list(part.stats.shard_items),
+            graph_resident_bytes=part.stats.max_shard_bytes,
+            graph_replicated_bytes=part.stats.replicated_bytes,
+            schedule="async", shard_steps=[0] * ndev,
+            pipeline_depth=PIPELINE_DEPTH)
+        base_asym, base_mut = global_bases(space)
+        if total_windows == 0:
+            return assemble_counts(space.n, base_asym, base_mut,
+                                   np.zeros(64, np.int64),
+                                   np.zeros(2, np.int64))
+
+        devices = list(self.mesh.devices.flat)
+        # per-device commit of each shard's padded local arrays (common
+        # shapes across shards, so ONE compiled single-device step serves
+        # every shard's every window)
+        arrs = stacked_device_arrays(part.shards)
+        dev = [tuple(jax.device_put(a[s], devices[s]) for a in arrs)
+               for s in range(ndev)]
+        step = _desc_step if emit == "device" else _chunk_step(self.mesh)
+        cache0 = _jit_cache_size(step)
+        if emit == "device":
+            idx = [jax.device_put(
+                np.arange(sched.chunk_shape, dtype=np.int32), d)
+                for d in devices]
+
+            def source(s):
+                for k in range(sched.steps_for(s)):
+                    yield sched.descriptors(s, k).device_words()
+        else:
+            def source(s):
+                for k in range(sched.steps_for(s)):
+                    sp, pv, num = sched.shard_step_items(s, k)
+                    if num == 0:
+                        # fully-pruned window: zero contribution by
+                        # construction — never dispatched
+                        continue
+                    yield sp, pv, num
+
+        hist_acc = np.zeros(64, np.int64)
+        inter_acc = np.zeros(2, np.int64)
+        chunk_items: list[int] = []
+        shard_steps = [0] * ndev
+        landed = [0]
+
+        def land(job) -> None:
+            s, fut, num = job
+            if num is None:
+                num = _land_desc_partials(fut, hist_acc, inter_acc,
+                                          chunk_items)
+            else:
+                np.add(hist_acc, np.asarray(fut[0], dtype=np.int64),
+                       out=hist_acc)
+                np.add(inter_acc, np.asarray(fut[1], dtype=np.int64),
+                       out=inter_acc)
+                chunk_items.append(num)
+            if progress is not None:
+                progress(landed[0], total_windows, num)
+            landed[0] += 1
+
+        pipeline = ShardStreamPipeline(
+            [source(s) for s in range(ndev)], depth=PIPELINE_DEPTH)
+        pending: deque = deque()
+        limit = 2 * ndev
+        try:
+            for s, window in pipeline:
+                d = devices[s]
+                if emit == "device":
+                    fut = step(*dev[s], jax.device_put(window, d),
+                               idx[s], None, space.search_iters,
+                               sched.desc_iters, self.backend,
+                               space.orient, space.prune_self)
+                    job = (s, fut, None)
+                else:
+                    sp, pv, num = window
+                    fut = step(*dev[s], jax.device_put(sp, d),
+                               jax.device_put(pv, d), None,
+                               space.search_iters, self.backend)
+                    job = (s, fut, num)
+                shard_steps[s] += 1
+                pending.append(job)
+                if len(pending) > limit:
+                    land(pending.popleft())
+            while pending:
+                land(pending.popleft())
+        finally:
+            pipeline.close()
+
+        st = self.stats
+        st.step_compiles = _jit_cache_size(step) - cache0
+        st.chunk_items = chunk_items
+        st.chunks = len(chunk_items)
+        st.items = int(sum(chunk_items))
+        st.shard_steps = shard_steps
+        st.stall_steps = pipeline.stalls
+        st.plan_upload_bytes_total = upload * sum(shard_steps)
+        mono_wp = -(-st.items // ndev) * ndev
         st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
         return assemble_counts(space.n, base_asym, base_mut,
                                hist_acc, inter_acc)
@@ -1210,17 +1444,37 @@ class PartitionedEngineSession:
     their endpoints' pairs (locality), else to the lightest shard.
     Bit-identical to a from-scratch census of the edited graph on every
     backend, orient and emit mode.
+
+    Sustained churn drifts the locality-routed loads away from the LPT
+    optimum (the spill cap bounds the drift at ~1.25x mean, but never
+    restores balance).  :meth:`rebalance` re-sharding — a fresh LPT over
+    the CURRENT pair space with every shard re-extracted + re-uploaded,
+    like :meth:`set_graph` but keeping the running census valid (counts
+    never depend on ownership) — restores ≈LPT balance;
+    ``auto_rebalance_threshold`` triggers it automatically at the end of
+    any :meth:`update` that leaves ``load_max_over_mean`` above the
+    threshold (``rebalances`` counts the triggers).
     """
 
     def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
                  orient: str = "none", prune_self: bool = True,
-                 max_items: int | None = None, emit: str | None = None):
+                 max_items: int | None = None, emit: str | None = None,
+                 auto_rebalance_threshold: float | None = None):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
+        if auto_rebalance_threshold is not None \
+                and auto_rebalance_threshold < 1.0:
+            raise ValueError(
+                "auto_rebalance_threshold must be >= 1.0, got "
+                f"{auto_rebalance_threshold}")
         emit = engine.emit if emit is None else emit
         if emit not in EMIT_MODES:
             raise ValueError(
                 f"unknown emit mode {emit!r}; one of {EMIT_MODES}")
+        self.auto_rebalance_threshold = (
+            None if auto_rebalance_threshold is None
+            else float(auto_rebalance_threshold))
+        self.rebalances = 0
         self.engine = engine
         self.orient = orient
         self.prune_self = prune_self
@@ -1334,6 +1588,36 @@ class PartitionedEngineSession:
         self._install_full(g)
         self._census = None
         self.last_delta = None
+
+    @property
+    def load_max_over_mean(self) -> float:
+        """Current shard load imbalance (post-prune items; 1.0 ==
+        perfectly balanced) — the quantity ``auto_rebalance_threshold``
+        is compared against after every update."""
+        total = sum(self._load)
+        if not total:
+            return 1.0
+        return max(self._load) / (total / self.ndev)
+
+    def rebalance(self) -> None:
+        """Re-shard the CURRENT resident graph with a fresh LPT (the
+        :meth:`set_graph` ownership reset without the graph change):
+        every shard re-extracts + re-uploads, restoring ≈LPT balance
+        after churn has drifted the locality-routed loads.  The running
+        census — and the pair space — are untouched: the census never
+        depends on which shard owns a pair, so no recount is needed and
+        :meth:`update` continues bit-identically from here."""
+        part = partition_graph(num_shards=self.ndev, space=self._space)
+        self._shards = list(part.shards)
+        self._keys = [sh.keys for sh in self._shards]
+        self._load = [sh.items for sh in self._shards]
+        self._upload_shards(range(self.ndev))
+        self.rebalances += 1
+
+    def _maybe_rebalance(self) -> None:
+        if self.auto_rebalance_threshold is not None and \
+                self.load_max_over_mean > self.auto_rebalance_threshold:
+            self.rebalance()
 
     # ---------------------------------------------------------- running
     def _dispatch_desc(self, s: int, win):
@@ -1619,4 +1903,5 @@ class PartitionedEngineSession:
                         self._postprune_items(),
                         int(aff_old.shape[0] + aff_new.shape[0]),
                         self._cache_size() - cache0)
+        self._maybe_rebalance()
         return self._census.copy()

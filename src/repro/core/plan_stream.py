@@ -34,6 +34,8 @@ Key properties:
 
 from __future__ import annotations
 
+import queue
+import threading
 from dataclasses import dataclass
 from typing import Iterator
 
@@ -174,17 +176,29 @@ class PlanChunker:
 
 
 class ShardSchedule:
-    """Lock-step per-shard chunk schedules under one compile-once geometry.
+    """Per-shard chunk schedules under one compile-once geometry.
 
     The partitioned engine gives every device a *private* stream: shard s
     walks its own item space in windows of ``chunk_shape`` pre-prune
     items.  This schedule locks the per-shard :class:`PlanChunker`
     geometries together — one common ``chunk_shape`` (the per-device slice
-    of ``max_items``), one common ``desc_shape`` (the widest pair span any
-    shard's window can have) and one common step count (the longest
-    shard's; shorter shards pad with empty windows) — so a single
-    fixed-shape collective dispatch per step advances every device's own
-    queue, and the jitted step compiles exactly once.
+    of ``max_items``) and one common ``desc_shape`` (the widest pair span
+    any shard's window can have) — so one fixed-shape jitted step serves
+    every shard's every window and compiles exactly once.
+
+    Two execution disciplines consume the same geometry:
+
+    * **Lock-step** (``schedule="lockstep"``): one collective dispatch
+      per step advances every device's queue together; ``num_steps`` is
+      the longest shard's step count and shorter shards pad with empty
+      windows (:meth:`step_words` / :meth:`step_items` stack all shards).
+      The bit-identity oracle.
+    * **Async** (``schedule="async"``, the default): each shard's private
+      queue is walked independently — :meth:`steps_for` real windows per
+      shard, no padding steps, no inter-shard barrier
+      (:meth:`shard_step_items` / :meth:`descriptors` serve one shard's
+      window at a time).  Walltime tracks the mean shard cost instead of
+      the max.
     """
 
     def __init__(self, spaces, max_items: int | None, num_devices: int):
@@ -215,6 +229,26 @@ class ShardSchedule:
     def num_shards(self) -> int:
         return len(self.spaces)
 
+    def steps_for(self, s: int) -> int:
+        """Shard ``s``'s REAL step count: the windows that actually carry
+        pre-prune items (``num_steps`` minus this shard's lock-step
+        padding)."""
+        return -(-self.spaces[s].num_items_preprune // self.chunk_shape)
+
+    @property
+    def shard_steps(self) -> list:
+        """Per-shard real step counts — the async schedule's work list
+        and the lock-step schedule's idle accounting
+        (``idle = num_steps * num_shards - sum(shard_steps)``)."""
+        return [self.steps_for(s) for s in range(self.num_shards)]
+
+    @property
+    def total_windows(self) -> int:
+        """Total real windows across every shard — the async path's
+        dispatch count (lock-step dispatches
+        ``num_steps * num_shards`` window lanes instead)."""
+        return sum(self.shard_steps)
+
     def _bounds(self, s: int, k: int) -> tuple[int, int]:
         """Item window [lo, hi) of shard ``s`` at step ``k`` — empty (at
         the space's end) once the shard's own queue is exhausted."""
@@ -234,6 +268,18 @@ class ShardSchedule:
         return np.stack([self.descriptors(s, k).device_words()
                          for s in range(self.num_shards)])
 
+    def shard_step_items(self, s: int, k: int
+                         ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Shard ``s``'s step-``k`` packed item window
+        ((chunk_shape,) sp/pv words + valid item count) — the per-shard
+        unit the async path dispatches one at a time."""
+        lo, hi = self._bounds(s, k)
+        item_pair, item_slot, item_side = emit_items(self.spaces[s],
+                                                     lo, hi)
+        sp, pv = pad_and_pack(item_pair, item_slot, item_side,
+                              self.chunk_shape)
+        return sp, pv, int(item_pair.shape[0])
+
     def step_items(self, k: int
                    ) -> tuple[np.ndarray, np.ndarray, list[int]]:
         """All shards' step-``k`` packed item windows, stacked
@@ -241,15 +287,105 @@ class ShardSchedule:
         host-emission twin of :meth:`step_words`."""
         sps, pvs, nums = [], [], []
         for s in range(self.num_shards):
-            lo, hi = self._bounds(s, k)
-            item_pair, item_slot, item_side = emit_items(
-                self.spaces[s], lo, hi)
-            nums.append(int(item_pair.shape[0]))
-            sp, pv = pad_and_pack(item_pair, item_slot, item_side,
-                                  self.chunk_shape)
+            sp, pv, num = self.shard_step_items(s, k)
+            nums.append(num)
             sps.append(sp)
             pvs.append(pv)
         return np.stack(sps), np.stack(pvs), nums
+
+
+#: end-of-stream sentinel of :class:`ShardStreamPipeline` producers
+_STREAM_DONE = object()
+
+
+class ShardStreamPipeline:
+    """Background per-shard window producers feeding a round-robin
+    consumer — the host half of the async partitioned pipeline.
+
+    One daemon thread per shard runs that shard's ``source`` generator
+    (descriptor-window packing or item emission — pure numpy host work)
+    into a private bounded queue of ``depth`` windows, so window k+1's
+    generation overlaps window k's upload + device compute and no shard's
+    production ever waits on another's.  ``depth=2`` double-buffers: one
+    window in flight to the device, one pre-built behind it.
+
+    Iterating the pipeline yields ``(shard, window)`` in round-robin
+    order over whichever shards have a window ready — a fast shard is
+    never held back by a slow one (no barrier); when *no* shard has one
+    ready the consumer blocks on the first live queue and counts a
+    **stall** (producer-bound moments, surfaced as
+    ``EngineStats.stall_steps``).  Producer exceptions re-raise in the
+    consumer; :meth:`close` unblocks and joins the threads (the engine
+    closes in a ``finally``).
+    """
+
+    def __init__(self, sources, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = int(depth)
+        self.stalls = 0
+        self._stop = threading.Event()
+        self._queues = [queue.Queue(maxsize=self.depth)
+                        for _ in sources]
+        self._threads = []
+        for q, src in zip(self._queues, sources):
+            t = threading.Thread(target=self._produce, args=(q, src),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _produce(self, q: queue.Queue, source) -> None:
+        try:
+            for window in source:
+                while not self._stop.is_set():
+                    try:
+                        q.put(window, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as exc:     # surfaced to the consumer
+            q.put(exc)
+            return
+        q.put(_STREAM_DONE)
+
+    @staticmethod
+    def _resolve(item, live: set, s: int):
+        if item is _STREAM_DONE:
+            live.discard(s)
+            return None
+        if isinstance(item, BaseException):
+            raise item
+        return (s, item)
+
+    def __iter__(self):
+        live = set(range(len(self._queues)))
+        while live:
+            progressed = False
+            for s in sorted(live):
+                try:
+                    item = self._queues[s].get_nowait()
+                except queue.Empty:
+                    continue
+                progressed = True
+                got = self._resolve(item, live, s)
+                if got is not None:
+                    yield got
+            if not progressed and live:
+                # every live producer is mid-generation: block on the
+                # lowest shard and record the stall
+                self.stalls += 1
+                s = min(live)
+                got = self._resolve(self._queues[s].get(), live, s)
+                if got is not None:
+                    yield got
+
+    def close(self) -> None:
+        """Stop the producers (idempotent); safe mid-iteration."""
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=1.0)
 
 
 def iter_plan_chunks(g: CompactDigraph, max_items: int,

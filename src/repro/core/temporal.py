@@ -106,6 +106,13 @@ class TriadMonitor:
         per-window :class:`~repro.core.engine.EngineStats` carry the
         shard balance/residency report.  Requires ``mesh``; censuses are
         bit-identical either way.
+    schedule : partitioned full-run execution discipline (``"async"``
+        per-shard streams by default, ``"lockstep"`` the collective
+        oracle); forwarded to the engine, bit-identical either way.
+    auto_rebalance_threshold : partitioned only — re-shard the resident
+        session with a fresh LPT whenever sliding-window churn pushes
+        the shard load max/mean past this value (see
+        :meth:`~repro.core.engine.PartitionedEngineSession.rebalance`).
     incremental : delta-update overlapping windows instead of recomputing
         them from scratch (bit-identical either way).
     emit : work-item emission mode for every window census and delta
@@ -121,7 +128,9 @@ class TriadMonitor:
                  incremental: bool = True,
                  max_items: int | None = None,
                  emit: str | None = None,
-                 partition: bool = False):
+                 partition: bool = False,
+                 schedule: str = "async",
+                 auto_rebalance_threshold: float | None = None):
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
         if window < 1:
@@ -144,8 +153,13 @@ class TriadMonitor:
         self.orient = orient
         self.max_items = max_items
         self.emit = emit
+        if auto_rebalance_threshold is not None and not partition:
+            raise ValueError(
+                "auto_rebalance_threshold requires partition=True")
+        self.auto_rebalance_threshold = auto_rebalance_threshold
         self.engine = CensusEngine(mesh=mesh, backend=backend,
-                                   partition=partition)
+                                   partition=partition,
+                                   schedule=schedule)
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
         self._arcset: np.ndarray | None = None      # current window's arcs
@@ -205,9 +219,13 @@ class TriadMonitor:
         n = self.n_nodes
         g = from_edges(arcs // n, arcs % n, n=n)
         if self._session is None:
+            kw = {}
+            if self.auto_rebalance_threshold is not None:
+                kw["auto_rebalance_threshold"] = \
+                    self.auto_rebalance_threshold
             self._session = self.engine.session(
                 g, orient=self.orient, max_items=self.max_items,
-                emit=self.emit)
+                emit=self.emit, **kw)
         else:
             self._session.set_graph(g)
         census = self._session.census()

@@ -67,6 +67,68 @@ class TestLPT:
         with pytest.raises(ValueError, match="num_shards"):
             lpt_assign(costs, 0)
 
+    def test_small_inputs_match_heap_exactly(self):
+        """≤ the exact-head cutoff the vectorized path delegates to the
+        heap outright — bit-identical assignments, so every historical
+        small-graph partition is preserved."""
+        from repro.core import lpt_assign_heap
+        rng = np.random.default_rng(5)
+        for ns in (1, 2, 4, 8):
+            costs = rng.integers(0, 100, size=700).astype(np.int64)
+            np.testing.assert_array_equal(lpt_assign(costs, ns),
+                                          lpt_assign_heap(costs, ns))
+
+    def test_large_input_balance_matches_heap(self):
+        """Above the cutoff the bucketed waterfill takes over; the
+        assignment may differ from the heap but the achieved balance
+        must match the heap oracle to within a hair."""
+        from repro.core import lpt_assign_heap
+        rng = np.random.default_rng(6)
+        costs = np.minimum(rng.zipf(1.7, size=30_000), 50_000
+                           ).astype(np.int64)
+        for ns in (2, 4, 8):
+            v = lpt_assign(costs, ns)
+            assert v.shape == costs.shape
+            assert v.min() >= 0 and v.max() < ns
+            lv = np.bincount(v, weights=costs, minlength=ns)
+            lh = np.bincount(lpt_assign_heap(costs, ns), weights=costs,
+                             minlength=ns)
+            assert lv.max() <= lh.max() * 1.01 + 1
+            np.testing.assert_array_equal(lpt_assign(costs, ns), v)
+
+    def test_large_input_is_vectorized_fast(self):
+        """The point of the rewrite: millions of pairs assign in seconds
+        where the python heap took minutes (loose bound — CI boxes)."""
+        import time
+        rng = np.random.default_rng(7)
+        costs = np.minimum(rng.zipf(1.8, size=2_000_000), 10 ** 6
+                           ).astype(np.int64)
+        t0 = time.perf_counter()
+        owner = lpt_assign(costs, 8)
+        dt = time.perf_counter() - t0
+        assert owner.shape == costs.shape
+        loads = np.bincount(owner, weights=costs, minlength=8)
+        assert loads.max() <= 1.05 * loads.sum() / 8
+        assert dt < 10.0
+
+    def test_zero_and_empty_costs(self):
+        assert lpt_assign(np.zeros(0, np.int64), 4).shape == (0,)
+        owner = lpt_assign(np.zeros(10_000, np.int64), 4)
+        assert owner.min() >= 0 and owner.max() < 4
+
+    def test_explicit_owner_override(self):
+        """partition_graph(owner=...) takes ANY assignment — the skew
+        hook — and validates shape + range."""
+        g = pl_graph(n=50, seed=2)
+        space = pair_space(g)
+        owner = np.arange(space.num_pairs, dtype=np.int64) % 3
+        part = partition_graph(g, num_shards=3, owner=owner)
+        np.testing.assert_array_equal(part.owner, owner)
+        with pytest.raises(ValueError, match="owner has"):
+            partition_graph(g, num_shards=3, owner=owner[:-1])
+        with pytest.raises(ValueError, match="outside"):
+            partition_graph(g, num_shards=2, owner=owner)
+
 
 # ----------------------------------------------------------- extraction
 
@@ -187,7 +249,7 @@ class TestShardCountInvariance:
     def test_compile_once_across_steps(self):
         g = pl_graph(n=90, seed=21)
         engine = CensusEngine(mesh=default_mesh(4), backend="jnp",
-                              partition=True)
+                              partition=True, schedule="lockstep")
         engine.run(g, max_items=64)        # many lock-step windows
         assert engine.stats.chunks >= 4
         assert engine.stats.step_compiles <= 1
@@ -352,6 +414,57 @@ class TestPartitionedSession:
         loads = [sh.items for sh in session.shards]
         assert max(loads) <= 1.6 * (sum(loads) / len(loads))
 
+    def test_explicit_rebalance_restores_lpt_balance(self):
+        """Satellite: rebalance() re-runs the LPT over the churned pair
+        space, recovers ≤ 1.1 imbalance, and the census stays exact."""
+        rng = np.random.default_rng(31)
+        g = pl_graph(n=60, deg=5, seed=31)
+        session = CensusEngine(mesh=default_mesh(4), backend="jnp",
+                               partition=True).session(g, max_items=2048)
+        session.census()
+        for _ in range(10):
+            add = random_arcs(rng, g.n, 30)
+            rem = random_arcs(rng, g.n, 30)
+            session.update(*add, *rem)
+            g, _ = apply_delta(g, *add, *rem)
+        session.rebalance()
+        assert session.rebalances == 1
+        assert session.load_max_over_mean <= 1.1
+        # census after rebalance is still exact, and further updates work
+        np.testing.assert_array_equal(session.census(),
+                                      census_batagelj_mrvar(g))
+        add = random_arcs(rng, g.n, 10)
+        got = session.update(*add, [], [])
+        g, _ = apply_delta(g, *add, [], [])
+        np.testing.assert_array_equal(got, census_batagelj_mrvar(g))
+
+    def test_auto_rebalance_threshold(self):
+        """Churn past the threshold triggers rebalance inside update();
+        the returned census is still the exact post-delta census."""
+        rng = np.random.default_rng(37)
+        g = pl_graph(n=60, deg=5, seed=37)
+        session = CensusEngine(mesh=default_mesh(4), backend="jnp",
+                               partition=True).session(
+            g, max_items=2048, auto_rebalance_threshold=1.1)
+        session.census()
+        for _ in range(12):
+            add = random_arcs(rng, g.n, 35)
+            rem = random_arcs(rng, g.n, 35)
+            got = session.update(*add, *rem)
+            g, _ = apply_delta(g, *add, *rem)
+            np.testing.assert_array_equal(got, census_batagelj_mrvar(g))
+        assert session.rebalances >= 1
+        assert session.load_max_over_mean <= 1.1
+
+    def test_auto_rebalance_threshold_validation(self):
+        eng = CensusEngine(mesh=default_mesh(2), backend="jnp",
+                           partition=True)
+        with pytest.raises(ValueError, match="threshold"):
+            eng.session(pl_graph(n=20), auto_rebalance_threshold=0.5)
+        with pytest.raises(ValueError, match="partition"):
+            CensusEngine(backend="jnp").session(
+                pl_graph(n=20), auto_rebalance_threshold=1.2)
+
 
 # -------------------------------------------------------------- monitor
 
@@ -405,9 +518,19 @@ class TestPhysicalStats:
         from repro.core.planner import num_desc_anchors
         g = pl_graph(n=80, seed=31)
         part = CensusEngine(mesh=default_mesh(4), backend="jnp",
+                            partition=True, emit="device",
+                            schedule="lockstep")
+        part.run(g, max_items=400)
+        st = part.stats
+        per_dev = st.chunk_shape // 4    # lock-step records global lanes
+        assert st.plan_upload_bytes == 4 * (
+            1 + 3 * st.desc_shape + num_desc_anchors(per_dev))
+        # async stats record the per-dispatch (single-device) window:
+        # same per-device upload unit, chunk_shape already per-device
+        part = CensusEngine(mesh=default_mesh(4), backend="jnp",
                             partition=True, emit="device")
         part.run(g, max_items=400)
         st = part.stats
-        per_dev = st.chunk_shape // 4    # stats record the global lanes
+        assert st.schedule == "async"
         assert st.plan_upload_bytes == 4 * (
-            1 + 3 * st.desc_shape + num_desc_anchors(per_dev))
+            1 + 3 * st.desc_shape + num_desc_anchors(st.chunk_shape))
