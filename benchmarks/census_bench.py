@@ -440,10 +440,14 @@ def partitioned_scaling(rows: list):
             f"{st.graph_replicated_bytes / max(st.graph_resident_bytes, 1):.2f}x;"
             f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
     # async per-shard streams on the same workload: no inter-shard
-    # barrier, per-shard chunk queues drained independently
+    # barrier, per-shard chunk queues drained independently.  Pinned to
+    # one window per dispatch so the row stays comparable with its
+    # pre-megastep history; part_mega_shard{4,8} below carries the
+    # batched dispatches.
     for shards in (4, 8):
         engine = CensusEngine(mesh=default_mesh(shards), backend="jnp",
-                              partition=True, schedule="async")
+                              partition=True, schedule="async",
+                              max_windows_per_dispatch=1)
         got = engine.run(g)
         if not (got == want).all():
             raise AssertionError(
@@ -457,6 +461,29 @@ def partitioned_scaling(rows: list):
             f"pipeline_depth={st.pipeline_depth};"
             f"upload_bytes={st.plan_upload_bytes_total};"
             f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
+    # megastep: same async schedule, up to 8 windows scanned per
+    # compiled dispatch — the Python dispatch cost is paid once per K.
+    # Streamed (1M-item windows) so each shard has a multi-window queue
+    # to batch; the unstreamed rows above have one window per shard,
+    # where the engine clamps the batch capacity back to 1.
+    for shards in (4, 8):
+        engine = CensusEngine(mesh=default_mesh(shards), backend="jnp",
+                              partition=True, schedule="async")
+        got = engine.run(g, max_items=1_048_576)
+        if not (got == want).all():
+            raise AssertionError(
+                f"megastep partitioned census mismatch at {shards} shards")
+        dt, _ = _timeit(engine.run, g, max_items=1_048_576)
+        st = engine.stats
+        rows.append((
+            f"part_mega_shard{shards}", dt * 1e6,
+            f"windows={sum(st.shard_steps)};"
+            f"dispatches={st.dispatches_total};"
+            f"win_per_disp={st.windows_per_dispatch_mean:.2f}/"
+            f"{st.windows_per_dispatch_max};"
+            f"cap={st.dispatch_batch_limit};"
+            f"pad_bytes={st.plan_pad_bytes_total};"
+            f"stalls={st.stall_steps}"))
 
 
 def _skewed_partition(space, num_shards: int, frac: float):
@@ -518,8 +545,14 @@ def async_smoke(rows: list):
     mesh = default_mesh(8)
 
     def run_once(schedule, part):
+        # pinned to one window per dispatch: this gate measures the PR 6
+        # barrier drop (skew vs mean-shard pacing) and its thresholds
+        # were calibrated there; the K-window megastep shifts the
+        # critical path from dispatch to per-shard compute and has its
+        # own gate (mega_smoke)
         engine = CensusEngine(mesh=mesh, backend="jnp",
-                              partition=True, schedule=schedule)
+                              partition=True, schedule=schedule,
+                              max_windows_per_dispatch=1)
         dt, got = _timeit(engine.run, g, max_items=max_items, part=part,
                           reps=2)
         if not (got == want).all():
@@ -552,6 +585,115 @@ def async_smoke(rows: list):
                  f"windows={sum(st_i.shard_steps)};"
                  f"shard_max_over_mean="
                  f"{st_i.shard_max_over_mean:.3f};parity=ok"))
+
+
+def dispatch_overhead(rows: list):
+    """Microbench for the megastep's target regime: a small per-window
+    item budget makes windows tiny and numerous, so per-dispatch Python
+    overhead (trace-cache lookup, device_put, future bookkeeping)
+    dominates device compute.  Rows compare async at one window per
+    dispatch (PR 6), async with the 8-window megastep, and the
+    lock-step oracle on the same 8-shard schedule."""
+    import jax
+
+    from repro.core import (CensusEngine, default_mesh,
+                            scale_free_digraph)
+
+    if len(jax.devices()) < 8:
+        rows.append(("dispatch_overhead_skipped", 0.0,
+                     f"needs 8 devices, have {len(jax.devices())}"))
+        return
+    g = scale_free_digraph(800, 6.0, 2.1, seed=3)
+    max_items = 2_048          # tiny windows: dispatch-bound on purpose
+    mesh = default_mesh(8)
+    want = None
+    for name, sched, cap in (("dispatch_async_k1", "async", 1),
+                             ("dispatch_mega_k8", "async", 8),
+                             ("dispatch_lockstep", "lockstep", 1)):
+        engine = CensusEngine(mesh=mesh, backend="jnp", partition=True,
+                              schedule=sched,
+                              max_windows_per_dispatch=cap)
+        got = engine.run(g, max_items=max_items)
+        if want is None:
+            want = got
+        elif not (got == want).all():
+            raise AssertionError(f"{name}: census mismatch")
+        dt, _ = _timeit(engine.run, g, max_items=max_items)
+        st = engine.stats
+        rows.append((
+            name, dt * 1e6,
+            f"windows={sum(st.shard_steps)};"
+            f"dispatches={st.dispatches_total};"
+            f"win_per_disp={st.windows_per_dispatch_mean:.2f};"
+            f"us_per_window={dt * 1e6 / max(sum(st.shard_steps), 1):.1f}"))
+
+
+def mega_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --mega-smoke): in the tiny-window
+    dispatch-bound regime on an 8-shard partition, the megastep must
+
+    * stay bit-identical to the lock-step oracle AND the single-device
+      census (per-window stacked partials + host int64 merge make the
+      K-window scan indistinguishable from K single dispatches),
+    * issue >= 2x fewer device dispatches than the one-window async
+      schedule at an equal window budget, and
+    * erase async's dispatch-overhead loss to lock-step: megastep
+      walltime <= 1.15x lock-step on the same schedule (PR 6's
+      one-window async pays ~windows× Python dispatch cost and loses
+      this regime; amortizing K windows per dispatch is the fix).
+    """
+    import jax
+
+    from repro.core import (CensusEngine, default_mesh,
+                            scale_free_digraph)
+
+    if len(jax.devices()) < 8:
+        raise AssertionError(
+            f"mega smoke needs 8 devices, have {len(jax.devices())} "
+            "(run via benchmarks/run.py, which forces them)")
+    g = scale_free_digraph(800, 6.0, 2.1, seed=3)
+    max_items = 2_048
+    want = CensusEngine(backend="jnp").run(g)
+    mesh = default_mesh(8)
+
+    def run_once(schedule, cap):
+        engine = CensusEngine(mesh=mesh, backend="jnp",
+                              partition=True, schedule=schedule,
+                              max_windows_per_dispatch=cap)
+        dt, got = _timeit(engine.run, g, max_items=max_items, reps=2)
+        if not (got == want).all():
+            raise AssertionError(
+                f"{schedule}/cap={cap} census != single-device")
+        return dt, engine.stats
+
+    t_k1, st_k1 = run_once("async", 1)
+    t_mega, st_mega = run_once("async", 8)
+    t_lock, st_lock = run_once("lockstep", 1)
+    if sum(st_mega.shard_steps) != sum(st_k1.shard_steps):
+        raise AssertionError(
+            "window budgets diverged: "
+            f"{sum(st_mega.shard_steps)} != {sum(st_k1.shard_steps)}")
+    if st_mega.dispatches_total * 2 > st_k1.dispatches_total:
+        raise AssertionError(
+            f"megastep dispatches {st_mega.dispatches_total} not >= 2x "
+            f"fewer than one-window async {st_k1.dispatches_total}")
+    if t_mega > 1.15 * t_lock:
+        raise AssertionError(
+            f"megastep is {t_mega / t_lock:.2f}x lock-step in the "
+            "dispatch-bound regime (need <= 1.15x)")
+    rows.append(("mega_smoke", t_mega * 1e6,
+                 f"windows={sum(st_mega.shard_steps)};"
+                 f"dispatches={st_mega.dispatches_total}v"
+                 f"{st_k1.dispatches_total};"
+                 f"win_per_disp={st_mega.windows_per_dispatch_mean:.2f}/"
+                 f"{st_mega.windows_per_dispatch_max};"
+                 f"vs_async_k1={t_mega / t_k1:.2f}x;"
+                 f"vs_lockstep={t_mega / t_lock:.2f}x;parity=ok"))
+    rows.append(("mega_smoke_async_k1", t_k1 * 1e6,
+                 f"dispatches={st_k1.dispatches_total};parity=ok"))
+    rows.append(("mega_smoke_lockstep", t_lock * 1e6,
+                 f"collective_steps={st_lock.dispatches_total};"
+                 f"idle_steps={st_lock.idle_steps};parity=ok"))
 
 
 def partition_smoke(rows: list):
@@ -756,6 +898,7 @@ def run(rows: list):
     streaming_vs_monolithic(rows)
     device_emission(rows)
     partitioned_scaling(rows)
+    dispatch_overhead(rows)
     temporal_windows(rows)
 
 

@@ -36,6 +36,15 @@
 # keeps paying for itself and can never silently regress to max-shard
 # pacing.
 #
+# The mega smoke (benchmarks/run.py --mega-smoke) runs the async
+# schedule's K-window megastep in the tiny-window dispatch-bound regime
+# (many small windows, Python dispatch cost dominating device compute)
+# and asserts bit-identity vs the lock-step oracle and the
+# single-device census, >= 2x fewer device dispatches than one-window
+# async at an equal window budget, and walltime within 1.15x of
+# lock-step — so batching K windows per compiled dispatch keeps erasing
+# the per-window round-trip and can never silently regress.
+#
 # The partition smoke (benchmarks/run.py --partition-smoke) runs the
 # partitioned engine — each device of an 8-virtual-host mesh holds only
 # its pair shard's relabeled local subgraph and walks its own descriptor
@@ -70,3 +79,6 @@ python -m benchmarks.run --partition-smoke
 
 echo "== async smoke (per-shard streams == lock-step, >= 1.5x on 4x skew) =="
 python -m benchmarks.run --async-smoke
+
+echo "== mega smoke (K-window megastep == lock-step, >= 2x fewer dispatches) =="
+python -m benchmarks.run --mega-smoke

@@ -51,6 +51,12 @@ def main() -> None:
                          "the single-device path on an 8-virtual-host "
                          "mesh, shard imbalance <= 1.2, >= 2x per-device "
                          "graph-byte reduction")
+    ap.add_argument("--mega-smoke", action="store_true",
+                    help="megastep gate: in the tiny-window dispatch-"
+                         "bound regime, K-window batched dispatches "
+                         "must stay bit-identical, issue >= 2x fewer "
+                         "dispatches than one-window async, and hold "
+                         "within 1.15x of lock-step walltime")
     ap.add_argument("--async-smoke", action="store_true",
                     help="async-schedule gate: on a synthetic 4x-skewed "
                          "8-shard partition, async per-shard streams "
@@ -77,7 +83,9 @@ def main() -> None:
 
     rows: list = []
     from benchmarks import census_bench
-    if args.async_smoke:
+    if args.mega_smoke:
+        census_bench.mega_smoke(rows)
+    elif args.async_smoke:
         census_bench.async_smoke(rows)
     elif args.partition_smoke:
         census_bench.partition_smoke(rows)

@@ -39,8 +39,9 @@ from repro.core.planner import (
     iter_descriptor_windows, pack_items, pair_space, unpack_items)
 from repro.core.plan_stream import (
     PlanChunk, PlanChunker, ShardSchedule, ShardStreamPipeline,
-    iter_plan_chunks)
-from repro.core.census import triad_census, assemble_census
+    WindowBatcher, iter_plan_chunks)
+from repro.core.census import (
+    triad_census, assemble_census, census_partials_desc_batch)
 from repro.core.engine import (
     CensusEngine, EMIT_MODES, SCHEDULES, EngineSession, EngineStats,
     PartitionedEngineSession)
@@ -71,7 +72,7 @@ __all__ = [
     "emit_items_for_pairs", "iter_descriptor_windows", "pack_items",
     "pair_space", "unpack_items",
     "PlanChunk", "PlanChunker", "ShardSchedule", "ShardStreamPipeline",
-    "iter_plan_chunks",
+    "WindowBatcher", "iter_plan_chunks",
     "CensusEngine", "EMIT_MODES", "SCHEDULES", "EngineSession",
     "EngineStats", "PartitionedEngineSession",
     "affected_pair_ids", "subset_contribution",
@@ -80,7 +81,7 @@ __all__ = [
     "lpt_assign", "lpt_assign_heap", "partition_graph",
     "replicated_graph_bytes",
     "shard_report",
-    "triad_census", "assemble_census",
+    "triad_census", "assemble_census", "census_partials_desc_batch",
     "triad_census_distributed", "triad_census_graph", "default_mesh",
     "census_bruteforce", "census_batagelj_mrvar", "census_dict",
     "TRIAD_NAMES", "TRICODE_TO_CLASS", "FOLD_64_TO_16", "NUM_CLASSES",

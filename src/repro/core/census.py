@@ -236,6 +236,58 @@ def census_partials_desc(indptr, packed, pair_u, pair_v, pair_code,
                             histogram_fn, keep_mask=keep)
 
 
+def census_partials_desc_batch(indptr, packed, pair_u, pair_v, pair_code,
+                               words_batch, idx, search_iters: int,
+                               desc_iters: int, orient: str,
+                               prune_self: bool, backend: str = "jnp"):
+    """Multi-window megastep partials: ``lax.scan`` over K stacked
+    descriptor windows inside ONE compiled dispatch.
+
+    ``words_batch`` is a fixed-shape ``(K, words)`` int32 buffer of
+    stacked :meth:`repro.core.planner.DescriptorWindow.device_words`
+    rows — the megabatch a
+    :class:`repro.core.plan_stream.WindowBatcher` coalesces so Python
+    dispatch cost is paid once per K windows instead of once per window.
+    Rows past the batch's real window count are all-zero padding: their
+    leading ``num_preprune`` word is 0, every lane of
+    :func:`expand_work_items` comes out invalid, and the masked window
+    contributes EXACT ZEROS — which is why any (real, padding) split of
+    the batch is bit-identical to K separate single-window dispatches.
+    A ``lax.cond`` on that word additionally skips the padded rows'
+    compute, so a partially-filled batch costs only its real windows.
+
+    Returns the per-window partials STACKED, ``(hist64s (K, 64),
+    inter3s (K, 3))`` int32, rather than device-reduced: the engine
+    merges them on the host in int64 exactly like the single-window
+    async path (jax's default int32 lattice cannot hold a K-window sum
+    without x64 mode, and the tiny (K, 67) transfer keeps the
+    per-window ``chunk_items`` stats lane intact).
+    """
+    from repro.core.planner import num_desc_anchors
+    num_anchors = num_desc_anchors(idx.shape[0])
+    num_descs = (words_batch.shape[1] - 1 - num_anchors) // 3
+    partials = desc_partials_fn(backend, search_iters, desc_iters,
+                                orient, prune_self)
+
+    def one(words):
+        nv = words[:1]
+        dp = words[1:1 + num_descs]
+        dc = words[1 + num_descs:1 + 2 * num_descs]
+        dw = words[1 + 2 * num_descs:1 + 3 * num_descs]
+        an = words[1 + 3 * num_descs:]
+        return partials(indptr, packed, pair_u, pair_v, pair_code,
+                        dp, dc, dw, an, nv, idx)
+
+    def zeros(_words):
+        return jnp.zeros(64, jnp.int32), jnp.zeros(3, jnp.int32)
+
+    def body(carry, words):
+        return carry, jax.lax.cond(words[0] > 0, one, zeros, words)
+
+    _, (hist64s, inter3s) = jax.lax.scan(body, None, words_batch)
+    return hist64s, inter3s
+
+
 def assemble_counts(n: int, base_asym: int, base_mut: int,
                     hist64: np.ndarray, inter: np.ndarray) -> np.ndarray:
     """Combine (accumulated) device partials with the closed-form bases

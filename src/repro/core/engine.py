@@ -75,8 +75,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.census import (
-    BACKENDS, assemble_census, assemble_counts, desc_partials_fn,
-    partials_fn)
+    BACKENDS, assemble_census, assemble_counts,
+    census_partials_desc_batch, desc_partials_fn, partials_fn)
 from repro.core.digraph import CompactDigraph, GraphDelta, apply_delta
 from repro.core.incremental import (
     affected_pair_ids, combine, contribution_counts,
@@ -90,7 +90,7 @@ from repro.core.planner import (
     iter_descriptor_windows, max_pairs_per_window, num_desc_anchors,
     pad_and_pack, pair_space, postprune_pair_counts)
 from repro.core.plan_stream import (
-    PlanChunker, ShardSchedule, ShardStreamPipeline)
+    PlanChunker, ShardSchedule, ShardStreamPipeline, WindowBatcher)
 
 #: work-item emission modes: ``device`` streams O(pairs) descriptors and
 #: expands pairs→items in-kernel (the default); ``host`` materializes and
@@ -109,6 +109,13 @@ SCHEDULES = ("async", "lockstep")
 #: per-shard produced-window queue depth of the async host pipeline
 #: (2 == double-buffering: one window in flight, one pre-built behind it)
 PIPELINE_DEPTH = 2
+
+#: default cap K on the descriptor windows one async megastep dispatch
+#: consumes (``lax.scan`` over the stacked window batch): Python dispatch
+#: cost is paid once per up-to-K windows; the live batch size adapts
+#: between 1 and this cap from stall/backlog feedback
+#: (:class:`repro.core.plan_stream.WindowBatcher`)
+MAX_WINDOWS_PER_DISPATCH = 8
 
 
 def _chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
@@ -213,6 +220,43 @@ _desc_step = functools.partial(
     jax.jit, static_argnames=(
         "mesh", "search_iters", "desc_iters", "backend", "orient",
         "prune_self"))(_desc_step_impl)
+
+
+def _desc_megastep_impl(indptr, packed, pair_u, pair_v, pair_code,
+                        words_batch, idx, search_iters, desc_iters,
+                        backend, orient, prune_self):
+    """K-window async megastep: one single-device dispatch scans a
+    fixed-shape ``(K, words)`` batch of stacked descriptor windows
+    (:func:`repro.core.census.census_partials_desc_batch`) and returns
+    the per-window partials stacked — ``(hist64s (K, 64),
+    inter3s (K, 3))`` int32, merged on the host in int64.  The batch
+    shape is the ``max_windows_per_dispatch`` cap regardless of how many
+    real windows landed (padding rows mask to exact zeros), so the step
+    compiles once per device no matter how the adaptive K schedule
+    moves."""
+    return census_partials_desc_batch(
+        indptr, packed, pair_u, pair_v, pair_code, words_batch, idx,
+        search_iters, desc_iters, orient, prune_self, backend=backend)
+
+
+_MEGA_STATIC = ("search_iters", "desc_iters", "backend", "orient",
+                "prune_self")
+_desc_megastep_donated = functools.partial(
+    jax.jit, static_argnames=_MEGA_STATIC,
+    donate_argnames=("words_batch",))(_desc_megastep_impl)
+_desc_megastep_plain = functools.partial(
+    jax.jit, static_argnames=_MEGA_STATIC)(_desc_megastep_impl)
+
+
+def _desc_megastep(mesh=None):
+    """The async megastep for the platform the work runs on: the window
+    ring buffers are donated on accelerators (each upload's HBM is
+    reused by the next double-buffered batch), plain on CPU (no
+    donation support)."""
+    platform = (mesh.devices.flat[0].platform if mesh is not None
+                else jax.default_backend())
+    return (_desc_megastep_plain if platform == "cpu"
+            else _desc_megastep_donated)
 
 
 def _part_chunk_step_impl(indptr, packed, pair_u, pair_v, pair_code,
@@ -405,12 +449,30 @@ class EngineStats:
     stall_steps: int = 0
     #: per-shard produced-window queue depth of the async host pipeline
     pipeline_depth: int = 0
-    #: TOTAL host→device plan bytes shipped over the whole run, summed
-    #: across devices and dispatches (``plan_upload_bytes`` is the
-    #: per-device per-dispatch unit); under async each shard pays only
-    #: for its real windows, under lock-step every device ships a window
-    #: every step — padding included
+    #: TOTAL host→device plan bytes attributed to REAL windows over the
+    #: whole run, summed across devices and dispatches
+    #: (``plan_upload_bytes`` is the per-window unit).  Padding that was
+    #: physically shipped but masked — megabatch rows past the real
+    #: window count under async, empty padded window lanes under
+    #: lock-step — is reported separately as ``plan_pad_bytes_total``
+    #: instead of silently inflating the per-shard numbers
     plan_upload_bytes_total: int = 0
+    #: masked-padding plan bytes physically shipped (see above); the
+    #: run's physical upload is the sum of both totals
+    plan_pad_bytes_total: int = 0
+    #: device dispatches issued for the run's windows: under the async
+    #: megastep one dispatch consumes up to ``dispatch_batch_limit``
+    #: windows, under lock-step one collective dispatch advances every
+    #: shard's lane one step
+    dispatches_total: int = 0
+    #: real windows per dispatch, mean and max over the run — the
+    #: dispatch-amortization record (async megastep: adapts toward
+    #: ``dispatch_batch_limit``; lock-step: the live-lane count)
+    windows_per_dispatch_mean: float = 0.0
+    windows_per_dispatch_max: int = 0
+    #: the megabatch cap K in effect (``max_windows_per_dispatch``;
+    #: 1 == no window batching, 0 == not an async/partitioned run)
+    dispatch_batch_limit: int = 0
 
     @property
     def shard_max_over_mean(self) -> float:
@@ -440,7 +502,11 @@ class EngineStats:
                     f"/{self.graph_replicated_bytes}")
             if self.schedule == "async":
                 part += (f" stalls={self.stall_steps} "
-                         f"depth={self.pipeline_depth}")
+                         f"depth={self.pipeline_depth} "
+                         f"dispatches={self.dispatches_total} "
+                         f"win/disp={self.windows_per_dispatch_mean:.2f}"
+                         f"/{self.windows_per_dispatch_max}"
+                         f"(cap {self.dispatch_batch_limit})")
             else:
                 part += f" idle_steps={self.idle_steps}"
         return (f"{self.backend} [{mode} emit={self.emit}] "
@@ -472,7 +538,10 @@ class CensusEngine:
 
     def __init__(self, mesh: Mesh | None = None, backend: str = "jnp",
                  emit: str = "device", partition: bool = False,
-                 schedule: str = "async"):
+                 schedule: str = "async",
+                 pipeline_depth: int = PIPELINE_DEPTH,
+                 max_windows_per_dispatch: int =
+                 MAX_WINDOWS_PER_DISPATCH):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
@@ -489,11 +558,23 @@ class CensusEngine:
                 raise ValueError(
                     "partitioned execution shards over a 1-D mesh; got "
                     f"shape {mesh.devices.shape}")
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
+        if max_windows_per_dispatch < 1:
+            raise ValueError(
+                "max_windows_per_dispatch must be >= 1, got "
+                f"{max_windows_per_dispatch}")
         self.mesh = mesh
         self.backend = backend
         self.emit = emit
         self.partition = partition
         self.schedule = schedule
+        #: per-shard produced-window queue depth of the async host
+        #: pipeline (:class:`repro.core.plan_stream.ShardStreamPipeline`)
+        self.pipeline_depth = int(pipeline_depth)
+        #: cap K on the windows one async megastep dispatch may consume
+        self.max_windows_per_dispatch = int(max_windows_per_dispatch)
         self.stats: EngineStats | None = None
 
     @property
@@ -832,8 +913,20 @@ class CensusEngine:
             schedule="lockstep", shard_steps=sched.shard_steps,
             idle_steps=(sched.num_steps * self.ndev
                         - sched.total_windows),
-            plan_upload_bytes_total=(sched.num_steps * self.ndev
-                                     * upload))
+            # real windows vs the empty padded lanes the barrier still
+            # ships: the physical upload is the sum of both totals
+            plan_upload_bytes_total=sched.total_windows * upload,
+            plan_pad_bytes_total=(sched.num_steps * self.ndev
+                                  - sched.total_windows) * upload,
+            dispatches_total=sched.num_steps,
+            windows_per_dispatch_mean=(
+                sched.total_windows / sched.num_steps
+                if sched.num_steps else 0.0),
+            # live lanes per step never exceed step 0's (shards only
+            # drain), so the max is the non-empty shard count
+            windows_per_dispatch_max=sum(
+                1 for t in sched.shard_steps if t > 0),
+            dispatch_batch_limit=1)
         base_asym, base_mut = global_bases(space)
         if sched.num_steps == 0:
             return assemble_counts(space.n, base_asym, base_mut,
@@ -918,14 +1011,30 @@ class CensusEngine:
 
         The host side is pipelined by a
         :class:`repro.core.plan_stream.ShardStreamPipeline`: one
-        background producer per shard packs descriptor windows / emits
-        item batches ``PIPELINE_DEPTH`` windows ahead into its private
-        queue, so window k+1's generation + upload overlaps window k's
-        compute; dispatches are async (futures) with a bounded in-flight
-        deque of ``2 * ndev``, keeping host + device plan memory
-        O(ndev · chunk_shape).  On accelerator platforms the packed item
-        buffers are donated (:func:`_chunk_step`), so the double-buffered
-        uploads reuse HBM.
+        background producer per non-empty shard packs descriptor
+        windows / emits item batches ``pipeline_depth`` windows ahead
+        into its private queue, so window k+1's generation + upload
+        overlaps window k's compute (zero-window shards never get a
+        producer or a rotation slot); dispatches are async (futures)
+        with a bounded in-flight deque of ``2 * ndev``, keeping host +
+        device plan memory O(ndev · chunk_shape).  On accelerator
+        platforms the uploaded buffers are donated (:func:`_chunk_step`
+        / :func:`_desc_megastep`), so the double-buffered uploads reuse
+        HBM.
+
+        Under ``emit="device"`` each dispatch is a **megastep**: the
+        producer coalesces up to K descriptor windows into one
+        fixed-shape ``(cap, words)`` batch
+        (:class:`repro.core.plan_stream.WindowBatcher`) and the device
+        scans them inside one compiled step
+        (:func:`_desc_megastep`), so Python dispatch cost — the async
+        schedule's Achilles' heel on fast devices with tiny windows —
+        is paid once per K windows.  K adapts live between 1 and
+        ``max_windows_per_dispatch``: consumer stalls shrink it
+        (producer-bound: smaller batches keep the pipeline full),
+        producer backlog grows it (dispatch-bound: amortize more).
+        ``emit="host"`` keeps the PR 6 one-window-per-dispatch path as
+        the oracle.
 
         Partials merge on the host in int64 — integer sums, so the
         arbitrary landing order is bit-identical to the lock-step psum.
@@ -933,6 +1042,13 @@ class CensusEngine:
         space = part.space
         ndev = self.ndev
         total_windows = sched.total_windows
+        # effective megabatch capacity: never pad past the longest
+        # shard's queue — a schedule whose every shard has s windows can
+        # fill at most s rows per batch, so a larger buffer would only
+        # upload dead zero rows (the scan already skips their compute)
+        cap = (max(1, min(self.max_windows_per_dispatch,
+                          max(sched.shard_steps, default=0)))
+               if emit == "device" else 1)
         self.stats = EngineStats(
             backend=self.backend, ndev=ndev, orient=space.orient,
             streamed=max_items is not None, max_items=max_items,
@@ -947,7 +1063,8 @@ class CensusEngine:
             graph_resident_bytes=part.stats.max_shard_bytes,
             graph_replicated_bytes=part.stats.replicated_bytes,
             schedule="async", shard_steps=[0] * ndev,
-            pipeline_depth=PIPELINE_DEPTH)
+            pipeline_depth=self.pipeline_depth,
+            dispatch_batch_limit=cap)
         base_asym, base_mut = global_bases(space)
         if total_windows == 0:
             return assemble_counts(space.n, base_asym, base_mut,
@@ -961,17 +1078,24 @@ class CensusEngine:
         arrs = stacked_device_arrays(part.shards)
         dev = [tuple(jax.device_put(a[s], devices[s]) for a in arrs)
                for s in range(ndev)]
-        step = _desc_step if emit == "device" else _chunk_step(self.mesh)
-        cache0 = _jit_cache_size(step)
+        # drained-shard short-circuit: a shard with zero windows never
+        # gets a producer thread or a consumer rotation slot
+        live = [s for s in range(ndev) if sched.steps_for(s) > 0]
+        batcher = None
         if emit == "device":
+            step = _desc_megastep(self.mesh)
             idx = [jax.device_put(
                 np.arange(sched.chunk_shape, dtype=np.int32), d)
                 for d in devices]
+            batcher = WindowBatcher(
+                cap, 1 + 3 * sched.desc_shape + sched.num_anchors)
 
             def source(s):
                 for k in range(sched.steps_for(s)):
                     yield sched.descriptors(s, k).device_words()
         else:
+            step = _chunk_step(self.mesh)
+
             def source(s):
                 for k in range(sched.steps_for(s)):
                     sp, pv, num = sched.shard_step_items(s, k)
@@ -981,47 +1105,71 @@ class CensusEngine:
                         continue
                     yield sp, pv, num
 
+        cache0 = _jit_cache_size(step)
         hist_acc = np.zeros(64, np.int64)
         inter_acc = np.zeros(2, np.int64)
         chunk_items: list[int] = []
         shard_steps = [0] * ndev
+        dispatches = 0
+        win_max = 0
+        pad_windows = 0
         landed = [0]
 
         def land(job) -> None:
-            s, fut, num = job
-            if num is None:
-                num = _land_desc_partials(fut, hist_acc, inter_acc,
-                                          chunk_items)
+            s, fut, x = job
+            if emit == "device":
+                # megastep: per-window int32 partials stacked (cap, ·);
+                # summing the first x rows through int64 is bit-identical
+                # to landing x single-window dispatches
+                hist64s = np.asarray(fut[0], dtype=np.int64)
+                inter3s = np.asarray(fut[1], dtype=np.int64)
+                np.add(hist_acc, hist64s[:x].sum(axis=0), out=hist_acc)
+                np.add(inter_acc, inter3s[:x, :2].sum(axis=0),
+                       out=inter_acc)
+                for i in range(x):
+                    num = int(inter3s[i, 2])
+                    chunk_items.append(num)
+                    if progress is not None:
+                        progress(landed[0], total_windows, num)
+                    landed[0] += 1
             else:
                 np.add(hist_acc, np.asarray(fut[0], dtype=np.int64),
                        out=hist_acc)
                 np.add(inter_acc, np.asarray(fut[1], dtype=np.int64),
                        out=inter_acc)
-                chunk_items.append(num)
-            if progress is not None:
-                progress(landed[0], total_windows, num)
-            landed[0] += 1
+                chunk_items.append(x)
+                if progress is not None:
+                    progress(landed[0], total_windows, x)
+                landed[0] += 1
 
         pipeline = ShardStreamPipeline(
-            [source(s) for s in range(ndev)], depth=PIPELINE_DEPTH)
+            [source(s) for s in live], depth=self.pipeline_depth,
+            batch=batcher)
         pending: deque = deque()
         limit = 2 * ndev
         try:
-            for s, window in pipeline:
+            for slot, window in pipeline:
+                s = live[slot]
                 d = devices[s]
                 if emit == "device":
-                    fut = step(*dev[s], jax.device_put(window, d),
-                               idx[s], None, space.search_iters,
+                    buf, k = window
+                    fut = step(*dev[s], jax.device_put(buf, d),
+                               idx[s], space.search_iters,
                                sched.desc_iters, self.backend,
                                space.orient, space.prune_self)
-                    job = (s, fut, None)
+                    job = (s, fut, k)
+                    shard_steps[s] += k
+                    win_max = max(win_max, k)
+                    pad_windows += cap - k
                 else:
                     sp, pv, num = window
                     fut = step(*dev[s], jax.device_put(sp, d),
                                jax.device_put(pv, d), None,
                                space.search_iters, self.backend)
                     job = (s, fut, num)
-                shard_steps[s] += 1
+                    shard_steps[s] += 1
+                    win_max = max(win_max, 1)
+                dispatches += 1
                 pending.append(job)
                 if len(pending) > limit:
                     land(pending.popleft())
@@ -1037,7 +1185,12 @@ class CensusEngine:
         st.items = int(sum(chunk_items))
         st.shard_steps = shard_steps
         st.stall_steps = pipeline.stalls
+        st.dispatches_total = dispatches
+        st.windows_per_dispatch_max = win_max
+        st.windows_per_dispatch_mean = (
+            sum(shard_steps) / dispatches if dispatches else 0.0)
         st.plan_upload_bytes_total = upload * sum(shard_steps)
+        st.plan_pad_bytes_total = upload * pad_windows
         mono_wp = -(-st.items // ndev) * ndev
         st.monolithic_plan_bytes = ITEM_BYTES * mono_wp
         return assemble_counts(space.n, base_asym, base_mut,

@@ -298,6 +298,75 @@ class ShardSchedule:
 _STREAM_DONE = object()
 
 
+class WindowBatcher:
+    """Adaptive K-window megabatch coalescer for the async pipeline.
+
+    :meth:`wrap` turns a per-shard descriptor-window source (a stream of
+    ``DescriptorWindow.device_words()`` rows, all of one schedule-wide
+    length ``words``) into a stream of fixed-shape megabatches: each
+    yield is ``(buffer, real)`` where ``buffer`` is ``(cap, words)``
+    int32 holding up to the CURRENT ``k`` stacked window rows and
+    ``real`` counts them.  Rows past ``real`` stay all-zero — their
+    leading ``num_preprune`` word is 0, so the megastep scan masks them
+    to exact zeros (:func:`repro.core.census.census_partials_desc_batch`)
+    — and the buffer shape never depends on ``k``, so the jitted
+    megastep compiles once regardless of how many real windows land.
+
+    ``k`` adapts in [1, cap] from live pipeline feedback, one monotone
+    move per signal:
+
+    * :meth:`shrink` (consumer stalled: every queue empty while batches
+      remain — the producers are the bottleneck) halves ``k`` so
+      smaller batches reach the device sooner and the pipeline stays
+      full;
+    * :meth:`grow` (producer backlogged: a put found its queue full —
+      the consumer/device side is the bottleneck) doubles ``k`` toward
+      ``cap`` to amortize more Python dispatch overhead per step.
+
+    ``k`` starts at ``cap`` (greedy: in the dispatch-bound regime the
+    batcher exists for, producers outrun the consumer and full batches
+    are right from the first dispatch).  Reads/writes of the single
+    ``k`` int are atomic under the GIL; a batch snapshots ``k`` when it
+    starts filling, so adaptive moves apply from the next batch on.
+    """
+
+    def __init__(self, cap: int, words: int, start: int | None = None):
+        if cap < 1:
+            raise ValueError(f"cap must be >= 1, got {cap}")
+        if words < 1:
+            raise ValueError(f"words must be >= 1, got {words}")
+        self.cap = int(cap)
+        self.words = int(words)
+        self.k = self.cap if start is None \
+            else max(1, min(int(start), self.cap))
+
+    def shrink(self) -> None:
+        """Producer-starved signal: halve ``k`` (floor 1)."""
+        self.k = max(1, self.k // 2)
+
+    def grow(self) -> None:
+        """Consumer-backlogged signal: double ``k`` (cap ``cap``)."""
+        self.k = min(self.cap, self.k * 2)
+
+    def wrap(self, source):
+        """Generator coalescing ``source``'s window rows into
+        ``(buffer (cap, words) int32, real)`` megabatches of at most
+        the current ``k`` windows each."""
+        it = iter(source)
+        while True:
+            take = self.k
+            buf = np.zeros((self.cap, self.words), dtype=np.int32)
+            real = 0
+            for row in it:
+                buf[real] = row
+                real += 1
+                if real >= take:
+                    break
+            if real == 0:
+                return
+            yield buf, real
+
+
 class ShardStreamPipeline:
     """Background per-shard window producers feeding a round-robin
     consumer — the host half of the async partitioned pipeline.
@@ -311,20 +380,39 @@ class ShardStreamPipeline:
 
     Iterating the pipeline yields ``(shard, window)`` in round-robin
     order over whichever shards have a window ready — a fast shard is
-    never held back by a slow one (no barrier); when *no* shard has one
-    ready the consumer blocks on the first live queue and counts a
-    **stall** (producer-bound moments, surfaced as
+    never held back by a slow one (no barrier); drained shards (their
+    ``_STREAM_DONE`` sentinel consumed) leave the rotation immediately
+    and are never polled again, so exhausted or empty-shard streams
+    cost the consumer nothing (the engine additionally never opens a
+    stream for a shard with zero windows).  When *no* live shard has a
+    window ready the consumer blocks on the first live queue and counts
+    a **stall** (producer-bound moments, surfaced as
     ``EngineStats.stall_steps``).  Producer exceptions re-raise in the
     consumer; :meth:`close` unblocks and joins the threads (the engine
     closes in a ``finally``).
+
+    ``batch`` (optional) is a :class:`WindowBatcher`: each source is
+    wrapped so its producer thread coalesces up to the batcher's
+    current ``k`` windows into one fixed-shape megabatch per queue
+    item, and the pipeline feeds the batcher its adaptive signals —
+    consumer stalls call :meth:`WindowBatcher.shrink` (only once
+    something has been consumed, so startup latency is not mistaken for
+    producer starvation) and producer backlog (a put finding its queue
+    full) calls :meth:`WindowBatcher.grow`, once per blocked window.
     """
 
-    def __init__(self, sources, depth: int = 2):
+    def __init__(self, sources, depth: int = 2, batch=None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.depth = int(depth)
+        self.batch = batch
         self.stalls = 0
+        self._consumed = 0
         self._stop = threading.Event()
+        sources = list(sources)
+        if batch is not None:
+            sources = [batch.wrap(src) for src in sources]
+        self._live = set(range(len(sources)))
         self._queues = [queue.Queue(maxsize=self.depth)
                         for _ in sources]
         self._threads = []
@@ -337,11 +425,17 @@ class ShardStreamPipeline:
     def _produce(self, q: queue.Queue, source) -> None:
         try:
             for window in source:
+                backlogged = False
                 while not self._stop.is_set():
                     try:
                         q.put(window, timeout=0.05)
                         break
                     except queue.Full:
+                        if not backlogged and self.batch is not None:
+                            # consumer behind: one grow signal per
+                            # blocked window, not per retry
+                            self.batch.grow()
+                            backlogged = True
                         continue
                 if self._stop.is_set():
                     return
@@ -350,34 +444,36 @@ class ShardStreamPipeline:
             return
         q.put(_STREAM_DONE)
 
-    @staticmethod
-    def _resolve(item, live: set, s: int):
+    def _resolve(self, item, s: int):
         if item is _STREAM_DONE:
-            live.discard(s)
+            # drained: out of the rotation for good — never polled again
+            self._live.discard(s)
             return None
         if isinstance(item, BaseException):
             raise item
+        self._consumed += 1
         return (s, item)
 
     def __iter__(self):
-        live = set(range(len(self._queues)))
-        while live:
+        while self._live:
             progressed = False
-            for s in sorted(live):
+            for s in sorted(self._live):
                 try:
                     item = self._queues[s].get_nowait()
                 except queue.Empty:
                     continue
                 progressed = True
-                got = self._resolve(item, live, s)
+                got = self._resolve(item, s)
                 if got is not None:
                     yield got
-            if not progressed and live:
+            if not progressed and self._live:
                 # every live producer is mid-generation: block on the
                 # lowest shard and record the stall
                 self.stalls += 1
-                s = min(live)
-                got = self._resolve(self._queues[s].get(), live, s)
+                if self.batch is not None and self._consumed:
+                    self.batch.shrink()
+                s = min(self._live)
+                got = self._resolve(self._queues[s].get(), s)
                 if got is not None:
                     yield got
 

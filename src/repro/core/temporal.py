@@ -51,7 +51,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.engine import CensusEngine, EMIT_MODES, EngineStats
+from repro.core.engine import (
+    CensusEngine, EMIT_MODES, EngineStats, MAX_WINDOWS_PER_DISPATCH,
+    PIPELINE_DEPTH)
 from repro.core.tricode import TRIAD_NAMES
 
 #: Paper Fig 3: triad patterns relevant to computer-network monitoring.
@@ -109,6 +111,13 @@ class TriadMonitor:
     schedule : partitioned full-run execution discipline (``"async"``
         per-shard streams by default, ``"lockstep"`` the collective
         oracle); forwarded to the engine, bit-identical either way.
+    pipeline_depth : per-shard produced-window queue depth of the async
+        host pipeline (default 2 — double-buffering); forwarded to the
+        engine and surfaced in each window's
+        ``EngineStats.pipeline_depth``.
+    max_windows_per_dispatch : cap K on the descriptor windows one
+        async megastep dispatch may scan (default 8); forwarded to the
+        engine, bit-identical for any K.
     auto_rebalance_threshold : partitioned only — re-shard the resident
         session with a fresh LPT whenever sliding-window churn pushes
         the shard load max/mean past this value (see
@@ -130,6 +139,9 @@ class TriadMonitor:
                  emit: str | None = None,
                  partition: bool = False,
                  schedule: str = "async",
+                 pipeline_depth: int = PIPELINE_DEPTH,
+                 max_windows_per_dispatch: int =
+                 MAX_WINDOWS_PER_DISPATCH,
                  auto_rebalance_threshold: float | None = None):
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
@@ -157,9 +169,10 @@ class TriadMonitor:
             raise ValueError(
                 "auto_rebalance_threshold requires partition=True")
         self.auto_rebalance_threshold = auto_rebalance_threshold
-        self.engine = CensusEngine(mesh=mesh, backend=backend,
-                                   partition=partition,
-                                   schedule=schedule)
+        self.engine = CensusEngine(
+            mesh=mesh, backend=backend, partition=partition,
+            schedule=schedule, pipeline_depth=pipeline_depth,
+            max_windows_per_dispatch=max_windows_per_dispatch)
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
         self._arcset: np.ndarray | None = None      # current window's arcs

@@ -278,8 +278,10 @@ class TestNoCrossShardSync:
 class TestAsyncStats:
     def test_lockstep_vs_async_stats_regression(self):
         """Satellite: upload/step attribution under async.  Same census,
-        same items, same per-shard step counts; async pays upload only
-        for real windows while lock-step pays ndev × max steps."""
+        same items, same per-shard step counts; both schedules attribute
+        upload to REAL windows, with padding split into a separate
+        counter (lock-step burns whole idle collective steps; async pads
+        only ragged megabatch tails)."""
         g = pl_graph(n=90, seed=11)
         part = skewed_partition(g, 4)
         st = {}
@@ -306,13 +308,21 @@ class TestAsyncStats:
         assert a.idle_steps == 0
         assert l.idle_steps == 4 * max(l.shard_steps) \
             - sum(l.shard_steps) > 0
-        # upload attribution: per-shard under async (< the lock-step
-        # total, which ships a padded window on every device each step)
+        # upload attribution: both schedules charge upload for REAL
+        # windows only; lock-step's padded idle steps land in the pad
+        # counter instead of inflating the upload total
         assert a.plan_upload_bytes_total == \
             a.plan_upload_bytes * sum(a.shard_steps)
         assert l.plan_upload_bytes_total == \
-            l.plan_upload_bytes * 4 * max(l.shard_steps)
-        assert a.plan_upload_bytes_total < l.plan_upload_bytes_total
+            l.plan_upload_bytes * sum(l.shard_steps)
+        assert a.plan_upload_bytes_total == l.plan_upload_bytes_total
+        assert l.plan_pad_bytes_total == \
+            l.plan_upload_bytes * l.idle_steps > 0
+        # async pad obeys the megabatch identity: cap × dispatches
+        # minus real windows, all ragged-tail slots
+        assert a.plan_pad_bytes_total == a.plan_upload_bytes * \
+            (a.dispatch_batch_limit * a.dispatches_total
+             - sum(a.shard_steps))
         # pipeline surface
         assert a.pipeline_depth == 2
         assert a.stall_steps >= 0
