@@ -484,6 +484,32 @@ def partitioned_scaling(rows: list):
             f"cap={st.dispatch_batch_limit};"
             f"pad_bytes={st.plan_pad_bytes_total};"
             f"stalls={st.stall_steps}"))
+    # 2D pair×vertex meshes on the same workload: the pair axis keeps
+    # the LPT assignment, the vertex axis slices each shard's adjacency
+    # halo.  halo = max per-device resident adjacency entries (the
+    # replicated CSR words the decomposition shards); 1D at 8 devices is
+    # the reference point.
+    from repro.core import partition_graph, partition_graph_2d
+    halo_1d = max(partition_graph(g, num_shards=8).stats.shard_entries)
+    for mesh_shape in ((4, 2), (2, 4)):
+        p, v = mesh_shape
+        engine = CensusEngine(mesh=default_mesh(8), backend="jnp",
+                              partition_2d=mesh_shape, schedule="async")
+        got = engine.run(g)
+        if not (got == want).all():
+            raise AssertionError(
+                f"2D partitioned census mismatch at {mesh_shape}")
+        dt, _ = _timeit(engine.run, g)
+        st = engine.stats
+        part2 = partition_graph_2d(g, mesh_shape=mesh_shape)
+        halo = max(part2.stats.shard_entries)
+        rows.append((
+            f"part_2d_shard{p}x{v}", dt * 1e6,
+            f"graph_bytes={st.graph_resident_bytes};"
+            f"halo_entries={halo};"
+            f"halo_cut_vs_1d8={halo_1d / max(halo, 1):.2f}x;"
+            f"entry_replication={part2.stats.entry_replication:.2f};"
+            f"shard_max_over_mean={st.shard_max_over_mean:.3f}"))
 
 
 def _skewed_partition(space, num_shards: int, frac: float):
@@ -769,6 +795,106 @@ def partition_smoke(rows: list):
                  f"affected_pairs={st.affected_pairs};items={st.items};"
                  f"dispatched_shards="
                  f"{sum(1 for x in st.shard_items if x)};parity=ok"))
+
+
+def twod_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --2d-smoke): the 2D pair×vertex
+    decomposition on an 8-virtual-host mesh.
+
+    Bit-identity: 2D censuses at (4,2) and (2,4) must equal the 1D
+    partitioned path and the single-device reference — both emits, both
+    orients, monolithic + streamed, async + lockstep, plus an
+    incremental 2D session.
+
+    Halo gate: on the power-law workload, the max per-device resident
+    adjacency entries (the halo — the replicated CSR words the vertex
+    axis shards; pair descriptors scale with owned work, not graph
+    size, and entries are structurally 2x the pair count, so total
+    bytes are pair-bound) must shrink ≥ 1.5x further than 1D at 8
+    devices on the (4,2) mesh and ≥ 2x on the (2,4) mesh, with total
+    per-device resident bytes no worse than 1D."""
+    import jax
+
+    from repro.core import (CensusEngine, default_mesh, pair_space,
+                            partition_graph, partition_graph_2d)
+
+    if len(jax.devices()) < 8:
+        raise AssertionError(
+            f"2d smoke needs 8 devices, have {len(jax.devices())} "
+            "(run via benchmarks/run.py, which forces them)")
+    g = paper_workload("patents", n=4_000, avg_degree=3.0, seed=0)
+    want = CensusEngine(backend="jnp").run(g)
+    w_pre = pair_space(g).num_items_preprune
+    mesh = default_mesh(8)
+    c1 = CensusEngine(mesh=mesh, backend="jnp", partition=True).run(g)
+    if not (c1 == want).all():
+        raise AssertionError("1D partitioned census != single-device")
+    for mesh_shape in ((4, 2), (2, 4)):
+        for emit in ("device", "host"):
+            for orient in ("none", "degree"):
+                t0 = time.perf_counter()
+                for schedule in ("async", "lockstep"):
+                    engine = CensusEngine(mesh=mesh, backend="jnp",
+                                          partition_2d=mesh_shape,
+                                          emit=emit, schedule=schedule)
+                    for max_items in (None, max(w_pre // 4, 1)):
+                        got = engine.run(g, max_items=max_items,
+                                         orient=orient)
+                        if not (got == want).all():
+                            raise AssertionError(
+                                f"{mesh_shape}/{emit}/{orient}/"
+                                f"{schedule}: 2D census != reference")
+                st = engine.stats
+                dt = time.perf_counter() - t0
+                rows.append((
+                    f"twod_smoke_{mesh_shape[0]}x{mesh_shape[1]}"
+                    f"_{emit}_{orient}", dt * 1e6,
+                    f"chunks={st.chunks};"
+                    f"mesh={st.partition_shape};parity=ok"))
+    # incremental 2D session: delta updates bit-identical to the
+    # unpartitioned session's
+    rng = np.random.default_rng(2)
+    add = (rng.integers(0, 4_000, 80), rng.integers(0, 4_000, 80))
+    rem = (rng.integers(0, 4_000, 80), rng.integers(0, 4_000, 80))
+    t0 = time.perf_counter()
+    ses_r = CensusEngine(mesh=mesh, backend="jnp").session(g)
+    ses_2 = CensusEngine(mesh=mesh, backend="jnp",
+                         partition_2d=(4, 2)).session(g)
+    if not (ses_r.census() == ses_2.census()).all():
+        raise AssertionError("2D session census diverges")
+    if not (ses_r.update(*add, *rem) == ses_2.update(*add, *rem)).all():
+        raise AssertionError("2D incremental update diverges")
+    dt = time.perf_counter() - t0
+    rows.append(("twod_smoke_session", dt * 1e6,
+                 f"affected_pairs={ses_2.stats.affected_pairs};"
+                 f"items={ses_2.stats.items};parity=ok"))
+    # halo gate on the power-law workload (host-side partition stats —
+    # no device work, so full scale is cheap)
+    gh = paper_workload("patents", n=20_000, avg_degree=8.0, seed=0)
+    t0 = time.perf_counter()
+    p1 = partition_graph(gh, num_shards=8)
+    halo_1d = max(p1.stats.shard_entries)
+    bytes_1d = p1.stats.max_shard_bytes
+    for mesh_shape, need in (((4, 2), 1.5), ((2, 4), 2.0)):
+        p2 = partition_graph_2d(gh, mesh_shape=mesh_shape)
+        halo = max(p2.stats.shard_entries)
+        cut = halo_1d / max(halo, 1)
+        if cut < need:
+            raise AssertionError(
+                f"{mesh_shape}: halo cut {cut:.2f}x < {need}x "
+                f"({halo_1d} -> {halo} resident entries)")
+        if mesh_shape == (4, 2) and \
+                p2.stats.max_shard_bytes > bytes_1d:
+            raise AssertionError(
+                f"{mesh_shape}: total resident bytes regressed "
+                f"{bytes_1d} -> {p2.stats.max_shard_bytes}")
+        rows.append((
+            f"twod_smoke_halo_{mesh_shape[0]}x{mesh_shape[1]}",
+            (time.perf_counter() - t0) * 1e6,
+            f"halo_entries={halo_1d}v{halo};cut={cut:.2f}x;"
+            f"bytes={bytes_1d}v{p2.stats.max_shard_bytes};"
+            f"entry_replication={p1.stats.entry_replication:.2f}v"
+            f"{p2.stats.entry_replication:.2f}"))
 
 
 def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,

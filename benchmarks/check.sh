@@ -53,6 +53,17 @@
 # and an incremental partitioned session), shard item imbalance <= 1.2,
 # and >= 2x per-device graph-byte reduction on the power-law workload.
 #
+# The 2D smoke (benchmarks/run.py --2d-smoke) runs the 2D pair×vertex
+# decomposition on an 8-virtual-host mesh — the pair axis keeps the 1D
+# LPT assignment, the vertex axis slices each shard's adjacency halo —
+# and asserts bit-identical censuses vs the 1D partitioned path and the
+# single-device reference ((4,2) and (2,4) meshes × both emits × both
+# orients × async + lockstep, monolithic + streamed, plus an
+# incremental 2D session), a >= 1.5x further cut in max per-device
+# resident adjacency entries over 1D at 8 devices on the (4,2) mesh
+# (>= 2x at (2,4)) on the power-law workload, and no total resident-
+# byte regression at (4,2).
+#
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -82,3 +93,6 @@ python -m benchmarks.run --async-smoke
 
 echo "== mega smoke (K-window megastep == lock-step, >= 2x fewer dispatches) =="
 python -m benchmarks.run --mega-smoke
+
+echo "== 2d smoke (pair×vertex mesh == 1D == reference, >= 1.5x further halo cut) =="
+python -m benchmarks.run --2d-smoke

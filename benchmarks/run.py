@@ -51,6 +51,15 @@ def main() -> None:
                          "the single-device path on an 8-virtual-host "
                          "mesh, shard imbalance <= 1.2, >= 2x per-device "
                          "graph-byte reduction")
+    ap.add_argument("--2d-smoke", dest="twod_smoke", action="store_true",
+                    help="2D pair×vertex decomposition gate: bit-"
+                         "identity 1D vs 2D vs reference on an 8-"
+                         "virtual-device mesh ((4,2) and (2,4), both "
+                         "emits, both orients, async + lockstep, "
+                         "incremental session), >= 1.5x further halo "
+                         "(resident adjacency entry) cut over 1D at "
+                         "(4,2) and >= 2x at (2,4) on the power-law "
+                         "workload")
     ap.add_argument("--mega-smoke", action="store_true",
                     help="megastep gate: in the tiny-window dispatch-"
                          "bound regime, K-window batched dispatches "
@@ -83,7 +92,9 @@ def main() -> None:
 
     rows: list = []
     from benchmarks import census_bench
-    if args.mega_smoke:
+    if args.twod_smoke:
+        census_bench.twod_smoke(rows)
+    elif args.mega_smoke:
         census_bench.mega_smoke(rows)
     elif args.async_smoke:
         census_bench.async_smoke(rows)

@@ -28,6 +28,13 @@ Public API::
     # inter-shard barrier; walltime tracks the MEAN shard, not the max);
     # schedule="lockstep" keeps the collective barrier as the oracle
     census = engine.run(g, schedule="lockstep")
+
+    # 2D pair×vertex: keep the LPT pair axis, slice each shard's
+    # witness range across V vertex slices — the adjacency halo shards
+    # too, not just the pairs
+    part = partition_graph_2d(g, mesh_shape=(4, 2))
+    engine = CensusEngine(mesh, backend="pallas-fused", partition_2d=(4, 2))
+    census = engine.run(g)            # still bit-identical
 """
 
 from repro.core.digraph import (
@@ -44,14 +51,14 @@ from repro.core.census import (
     triad_census, assemble_census, census_partials_desc_batch)
 from repro.core.engine import (
     CensusEngine, EMIT_MODES, SCHEDULES, EngineSession, EngineStats,
-    PartitionedEngineSession)
+    PartitionedEngineSession, PartitionedEngineSession2D)
 from repro.core.incremental import (
     affected_pair_ids, subset_contribution, subset_descriptor_windows,
     verify_delta_closure)
 from repro.core.partition import (
-    GraphPartition, LocalShard, PartitionStats, extract_shard,
-    lpt_assign, lpt_assign_heap, partition_graph,
-    replicated_graph_bytes)
+    GraphPartition, GraphPartition2D, LocalShard, PartitionStats,
+    extract_shard, lpt_assign, lpt_assign_heap, partition_graph,
+    partition_graph_2d, replicated_graph_bytes, vertex_slices)
 from repro.core.distributed import (
     shard_report, triad_census_distributed, triad_census_graph,
     default_mesh)
@@ -75,11 +82,12 @@ __all__ = [
     "WindowBatcher", "iter_plan_chunks",
     "CensusEngine", "EMIT_MODES", "SCHEDULES", "EngineSession",
     "EngineStats", "PartitionedEngineSession",
+    "PartitionedEngineSession2D",
     "affected_pair_ids", "subset_contribution",
     "subset_descriptor_windows", "verify_delta_closure",
-    "GraphPartition", "LocalShard", "PartitionStats", "extract_shard",
-    "lpt_assign", "lpt_assign_heap", "partition_graph",
-    "replicated_graph_bytes",
+    "GraphPartition", "GraphPartition2D", "LocalShard", "PartitionStats",
+    "extract_shard", "lpt_assign", "lpt_assign_heap", "partition_graph",
+    "partition_graph_2d", "replicated_graph_bytes", "vertex_slices",
     "shard_report",
     "triad_census", "assemble_census", "census_partials_desc_batch",
     "triad_census_distributed", "triad_census_graph", "default_mesh",

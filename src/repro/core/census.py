@@ -123,11 +123,14 @@ def expand_work_items(indptr, pair_u, pair_v, desc_pair, desc_cum,
     real index, so the lower-bound search can never land on padding).
     ``anchors`` pre-resolves each :data:`DESC_ANCHOR_STRIDE`-item span to
     its first descriptor, so the per-lane search covers at most
-    ``stride/2 + 1`` candidates (every pair spans >= 2 pre-prune items)
-    and ``desc_iters`` is the constant
-    :data:`repro.core.planner.DESC_SEARCH_ITERS` — extra iterations are
-    harmless (the converged lower bound is a fixed point of the search
-    body, and the result is clamped into the anchored range).
+    ``stride + 1`` candidates (every descriptor spans >= 1 pre-prune
+    item — 2D vertex-sliced tiles keep pairs with a single in-slice
+    item, so the old ``stride/2 + 1`` bound under the global >= 2
+    items-per-pair invariant no longer holds) and ``desc_iters`` is the
+    constant :data:`repro.core.planner.DESC_SEARCH_ITERS` — extra
+    iterations are harmless (the converged lower bound is a fixed point
+    of the search body, and the result is clamped into the anchored
+    range).
     ``num_valid`` is a traced scalar: lanes past it are padding and come
     out clamped to safe (pair 0, slot 0) coordinates.
     """
@@ -135,7 +138,7 @@ def expand_work_items(indptr, pair_u, pair_v, desc_pair, desc_cum,
     num_descs = desc_cum.shape[0]
     a = jnp.clip(idx // DESC_ANCHOR_STRIDE, 0, anchors.shape[0] - 1)
     lo_d = anchors[a]
-    hi_d = jnp.minimum(lo_d + DESC_ANCHOR_STRIDE // 2 + 1, num_descs)
+    hi_d = jnp.minimum(lo_d + DESC_ANCHOR_STRIDE + 1, num_descs)
     d = segment_searchsorted(desc_cum, lo_d, hi_d, idx + 1,
                              desc_iters) - 1
     d = jnp.minimum(jnp.clip(d, 0, num_descs - 1), hi_d - 1)

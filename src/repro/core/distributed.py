@@ -15,6 +15,16 @@ per-processor private census vectors:
   collective step; the private histograms meet in one ``psum``.
   Bit-identical to the replicated and single-device paths for every
   backend, orient and emit mode.
+* **2D partitioned** (``partition_2d=(P, V)`` /
+  :func:`partition_graph_2d`): the mesh is read as ``pair_shards ×
+  vertex_slices``.  The pair axis keeps the 1D LPT assignment; each pair
+  shard's witness range is then split across ``V`` contiguous vertex
+  slices, so tile ``(s, j)`` holds only the slice of each endpoint row
+  whose neighbor ids fall in its vertex range — the *halo* (replicated
+  adjacency entries) shrinks from the 1D level at ``P·V`` shards to the
+  1D level at ``P`` shards, spread over ``V`` devices.  Per-tile item
+  sub-ranges partition each pair's global item space exactly, so the
+  merged census stays bit-identical to the 1D and reference paths.
 
 What lives here is the public surface:
 
@@ -42,16 +52,18 @@ from jax.sharding import Mesh
 
 from repro.core.digraph import CompactDigraph
 from repro.core.partition import (
-    GraphPartition, LocalShard, PartitionStats, extract_shard,
-    graph_bytes, lpt_assign, lpt_assign_heap, partition_graph,
-    replicated_graph_bytes)
+    GraphPartition, GraphPartition2D, LocalShard, PartitionStats,
+    extract_shard, graph_bytes, lpt_assign, lpt_assign_heap,
+    partition_graph, partition_graph_2d, replicated_graph_bytes,
+    vertex_slices)
 from repro.core.planner import CensusPlan
 
 __all__ = [
-    "GraphPartition", "LocalShard", "PartitionStats", "default_mesh",
-    "extract_shard", "graph_bytes", "lpt_assign", "lpt_assign_heap",
-    "partition_graph", "replicated_graph_bytes", "shard_report",
-    "triad_census_distributed", "triad_census_graph",
+    "GraphPartition", "GraphPartition2D", "LocalShard", "PartitionStats",
+    "default_mesh", "extract_shard", "graph_bytes", "lpt_assign",
+    "lpt_assign_heap", "partition_graph", "partition_graph_2d",
+    "replicated_graph_bytes", "shard_report", "triad_census_distributed",
+    "triad_census_graph", "vertex_slices",
 ]
 
 
@@ -71,9 +83,11 @@ def default_mesh(num_devices: int | None = None) -> Mesh:
     return Mesh(np.asarray(devs[:k]), ("devices",))
 
 
-def shard_report(part: GraphPartition) -> str:
+def shard_report(part: GraphPartition | GraphPartition2D) -> str:
     """Human-readable per-shard balance + residency table of a
-    :func:`partition_graph` result."""
+    :func:`partition_graph` or :func:`partition_graph_2d` result (2D
+    partitions label each row with its ``(pair_shard, vertex_slice)``
+    tile coordinate and add a resident-entry replication line)."""
     return part.stats.report()
 
 
@@ -95,6 +109,7 @@ def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
                        progress=None,
                        emit: str | None = None,
                        partition: bool = False,
+                       partition_2d: tuple[int, int] | None = None,
                        schedule: str = "async") -> np.ndarray:
     """Convenience: plan + distribute + count in one call.
 
@@ -107,12 +122,16 @@ def triad_census_graph(g: CompactDigraph, mesh: Mesh | None = None,
     stream (:mod:`repro.core.partition`); ``schedule`` then picks the
     execution discipline (``"async"``: private per-shard streams, no
     inter-shard barrier; ``"lockstep"``: the collective oracle).
-    Bit-identical on every combination.
+    ``partition_2d=(P, V)`` upgrades the partitioned path to the 2D
+    pair×vertex decomposition — ``P·V`` must equal the mesh's device
+    count — sharding each pair shard's adjacency halo across ``V``
+    vertex slices.  Bit-identical on every combination.
     """
     from repro.core.engine import CensusEngine
     if mesh is None:
         mesh = default_mesh()
     engine = CensusEngine(mesh=mesh, backend=backend,
-                          partition=partition, schedule=schedule)
+                          partition=partition, partition_2d=partition_2d,
+                          schedule=schedule)
     return engine.run(g, max_items=max_items, orient=orient,
                       progress=progress, emit=emit)

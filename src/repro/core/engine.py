@@ -82,7 +82,9 @@ from repro.core.incremental import (
     affected_pair_ids, combine, contribution_counts,
     subset_descriptor_windows)
 from repro.core.partition import (
-    extract_shard, partition_graph, replicated_graph_bytes,
+    extract_shard, partition_graph, partition_graph_2d,
+    range_postprune_pair_counts, slice_pair_terms,
+    replicated_graph_bytes,
     stacked_device_arrays)
 from repro.core.planner import (
     DESC_BYTES, DESC_SEARCH_ITERS, CensusPlan, base_for_pairs,
@@ -425,6 +427,9 @@ class EngineStats:
     #: True when the run sharded the GRAPH (each device held only its
     #: pair shard's local subgraph), not just the work items
     partitioned: bool = False
+    #: (pair_shards, vertex_slices) of a 2D-partitioned run; None when
+    #: un-partitioned or 1D (device d serves tile (d // V, d % V))
+    partition_shape: tuple | None = None
     #: per-shard post-prune work items owned (partitioned runs: the LPT
     #: balance record; per-update dispatch record for sessions)
     shard_items: list[int] = field(default_factory=list)
@@ -495,7 +500,10 @@ class EngineStats:
                 else "monolithic")
         part = ""
         if self.partitioned:
-            part = (f" partitioned[{self.schedule}] "
+            mesh2d = (f" mesh={self.partition_shape[0]}"
+                      f"x{self.partition_shape[1]}"
+                      if self.partition_shape else "")
+            part = (f" partitioned[{self.schedule}]{mesh2d} "
                     f"shards={len(self.shard_items)} "
                     f"shard_max_over_mean={self.shard_max_over_mean:.3f} "
                     f"graph_bytes={self.graph_resident_bytes}"
@@ -541,7 +549,8 @@ class CensusEngine:
                  schedule: str = "async",
                  pipeline_depth: int = PIPELINE_DEPTH,
                  max_windows_per_dispatch: int =
-                 MAX_WINDOWS_PER_DISPATCH):
+                 MAX_WINDOWS_PER_DISPATCH,
+                 partition_2d: tuple | None = None):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
@@ -551,6 +560,12 @@ class CensusEngine:
         if schedule not in SCHEDULES:
             raise ValueError(
                 f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+        if partition_2d is not None:
+            partition = True          # a 2D mesh factorization implies it
+            partition_2d = (int(partition_2d[0]), int(partition_2d[1]))
+            if partition_2d[0] < 1 or partition_2d[1] < 1:
+                raise ValueError(
+                    f"partition_2d must be >= (1, 1), got {partition_2d}")
         if partition:
             if mesh is None:
                 raise ValueError("partition=True requires a mesh")
@@ -558,6 +573,13 @@ class CensusEngine:
                 raise ValueError(
                     "partitioned execution shards over a 1-D mesh; got "
                     f"shape {mesh.devices.shape}")
+            ndev = int(np.prod(mesh.devices.shape))
+            if (partition_2d is not None
+                    and partition_2d[0] * partition_2d[1] != ndev):
+                raise ValueError(
+                    f"partition_2d {partition_2d} needs "
+                    f"{partition_2d[0] * partition_2d[1]} devices; the "
+                    f"mesh has {ndev}")
         if pipeline_depth < 1:
             raise ValueError(
                 f"pipeline_depth must be >= 1, got {pipeline_depth}")
@@ -569,6 +591,9 @@ class CensusEngine:
         self.backend = backend
         self.emit = emit
         self.partition = partition
+        #: (pair_shards, vertex_slices) factorization of the 1-D mesh;
+        #: device d serves tile (d // V, d % V).  None == 1D partition.
+        self.partition_2d = partition_2d
         self.schedule = schedule
         #: per-shard produced-window queue depth of the async host
         #: pipeline (:class:`repro.core.plan_stream.ShardStreamPipeline`)
@@ -713,6 +738,12 @@ class CensusEngine:
         ``max/mean`` past it (see
         :meth:`PartitionedEngineSession.rebalance`)."""
         if self.partition:
+            if self.partition_2d is not None:
+                return PartitionedEngineSession2D(
+                    self, g, mesh_shape=self.partition_2d,
+                    orient=orient, prune_self=prune_self,
+                    max_items=max_items, emit=emit,
+                    auto_rebalance_threshold=auto_rebalance_threshold)
             return PartitionedEngineSession(
                 self, g, orient=orient, prune_self=prune_self,
                 max_items=max_items, emit=emit,
@@ -882,15 +913,27 @@ class CensusEngine:
         relabeling is order-preserving, the pair partition is exact, and
         the partials are integer sums — merge order cannot matter)."""
         if part is None:
-            part = partition_graph(num_shards=self.ndev, space=pair_space(
-                g, orient=orient, prune_self=prune_self))
+            space = pair_space(g, orient=orient, prune_self=prune_self)
+            part = (partition_graph_2d(space=space,
+                                       mesh_shape=self.partition_2d)
+                    if self.partition_2d is not None
+                    else partition_graph(num_shards=self.ndev,
+                                         space=space))
         elif part.num_shards != self.ndev:
             raise ValueError(
                 f"prebuilt partition has {part.num_shards} shards for "
                 f"{self.ndev} devices")
+        elif (self.partition_2d is not None
+              and getattr(part, "mesh_shape", None) != self.partition_2d):
+            raise ValueError(
+                f"prebuilt partition mesh "
+                f"{getattr(part, 'mesh_shape', None)} does not match "
+                f"partition_2d={self.partition_2d}")
         space = part.space
         sched = ShardSchedule([sh.space for sh in part.shards],
-                              max_items, self.ndev)
+                              max_items, self.ndev,
+                              mesh_shape=getattr(part, "mesh_shape",
+                                                 None))
         upload = (4 * (1 + 3 * sched.desc_shape + sched.num_anchors)
                   if emit == "device"
                   else ITEM_BYTES * sched.chunk_shape)
@@ -907,6 +950,7 @@ class CensusEngine:
             emit=emit,
             desc_shape=sched.desc_shape if emit == "device" else 0,
             plan_upload_bytes=upload, partitioned=True,
+            partition_shape=getattr(part, "mesh_shape", None),
             shard_items=list(part.stats.shard_items),
             graph_resident_bytes=part.stats.max_shard_bytes,
             graph_replicated_bytes=part.stats.replicated_bytes,
@@ -1059,6 +1103,7 @@ class CensusEngine:
             emit=emit,
             desc_shape=sched.desc_shape if emit == "device" else 0,
             plan_upload_bytes=upload, partitioned=True,
+            partition_shape=getattr(part, "mesh_shape", None),
             shard_items=list(part.stats.shard_items),
             graph_resident_bytes=part.stats.max_shard_bytes,
             graph_replicated_bytes=part.stats.replicated_bytes,
@@ -1674,10 +1719,10 @@ class PartitionedEngineSession:
                            prune_self=self.prune_self)
         self._space = space
         self._full_items: int | None = None
-        part = partition_graph(num_shards=self.ndev, space=space)
+        part = self._make_partition(space)
         self._shards = list(part.shards)
         self._keys = [sh.keys for sh in self._shards]
-        self._load = [sh.items for sh in self._shards]
+        self._set_ownership(part)
         if self.chunk_shape is None:
             budget = (self.max_items if self.max_items is not None
                       else max(space.num_items_preprune, 1))
@@ -1695,6 +1740,28 @@ class PartitionedEngineSession:
                 for d in self._devices]
         self._dev: list = [None] * self.ndev
         self._upload_shards(range(self.ndev))
+
+    # ----------------------------------------------- ownership hooks
+    # The 2D session (:class:`PartitionedEngineSession2D`) overrides
+    # these four: there a device holds a TILE (pair shard × vertex
+    # slice) while ownership/load bookkeeping stays per pair shard.
+    def _make_partition(self, space):
+        """Partition ``space`` into the device-resident shard list."""
+        return partition_graph(num_shards=self.ndev, space=space)
+
+    def _set_ownership(self, part) -> None:
+        """Record ownership/load bookkeeping from a fresh partition."""
+        self._load = [sh.items for sh in self._shards]
+
+    def _tile_shard(self, s: int) -> int:
+        """Device/tile index → owning pair shard (identity in 1D)."""
+        return s
+
+    def _ownership(self) -> list:
+        """Per pair shard sorted global key arrays (the reassignment
+        target of :meth:`update`); the per-device dispatch key sets in
+        1D, the per-shard sets distinct from ``_keys`` in 2D."""
+        return self._keys
 
     def _upload_shards(self, shard_ids) -> None:
         """(Re)upload the listed shards' padded local arrays onto their
@@ -1750,7 +1817,7 @@ class PartitionedEngineSession:
         total = sum(self._load)
         if not total:
             return 1.0
-        return max(self._load) / (total / self.ndev)
+        return max(self._load) / (total / len(self._load))
 
     def rebalance(self) -> None:
         """Re-shard the CURRENT resident graph with a fresh LPT (the
@@ -1760,10 +1827,10 @@ class PartitionedEngineSession:
         census — and the pair space — are untouched: the census never
         depends on which shard owns a pair, so no recount is needed and
         :meth:`update` continues bit-identically from here."""
-        part = partition_graph(num_shards=self.ndev, space=self._space)
+        part = self._make_partition(self._space)
         self._shards = list(part.shards)
         self._keys = [sh.keys for sh in self._shards]
-        self._load = [sh.items for sh in self._shards]
+        self._set_ownership(part)
         self._upload_shards(range(self.ndev))
         self.rebalances += 1
 
@@ -1903,7 +1970,9 @@ class PartitionedEngineSession:
                 if self.emit == "device"
                 else ITEM_BYTES * self.chunk_shape),
             capacity_recompiles=capacity_recompiles,
-            partitioned=True, shard_items=shard_items,
+            partitioned=True,
+            partition_shape=getattr(self, "mesh_shape", None),
+            shard_items=shard_items,
             graph_resident_bytes=max(sh.resident_bytes
                                      for sh in self._shards),
             graph_replicated_bytes=replicated_graph_bytes(self._space))
@@ -1953,7 +2022,8 @@ class PartitionedEngineSession:
                         np.concatenate([self._space.pair_u[gids],
                                         self._space.pair_v[gids]]),
                         touched).tolist():
-                    touched_owner.setdefault(int(u), s)
+                    touched_owner.setdefault(int(u),
+                                             self._tile_shard(s))
             ba, bm = base_for_pairs(sh.space, loc)
             base_asym += ba
             base_mut += bm
@@ -1963,6 +2033,19 @@ class PartitionedEngineSession:
         self._drain(streams, hist, inter, chunk_items, shard_items)
         return contribution_counts(base_asym, base_mut, hist, inter), \
             dirty
+
+    def _refresh_shards(self, dirty, space_new, key_all_new) -> None:
+        """Re-extract + re-upload the dirty pair shards against the new
+        space; untouched shards keep their device buffers verbatim."""
+        # one global cost scan shared by every dirty shard's refresh
+        # (extract_shard would otherwise recount it per shard)
+        costs_new = postprune_pair_counts(space_new)
+        for s in dirty:
+            ids = np.searchsorted(key_all_new, self._keys[s])
+            self._shards[s] = extract_shard(space_new, ids, index=s,
+                                            costs=costs_new)
+            self._load[s] = self._shards[s].items
+        self._upload_shards(dirty)
 
     def update(self, add_src=None, add_dst=None,
                del_src=None, del_dst=None) -> np.ndarray:
@@ -2006,11 +2089,15 @@ class PartitionedEngineSession:
         dkeys = delta.pair_lo * n + delta.pair_hi
         vanished = dkeys[delta.new_code == 0]
         appeared = dkeys[delta.old_code == 0]
-        dirty = set(dirty_old)
+        okeys = self._ownership()
+        # dirty is tracked per PAIR SHARD (== per device in 1D; a 2D
+        # shard refreshes all of its vertex-slice tiles together so the
+        # designated base-term slice stays consistent within the shard)
+        dirty = {self._tile_shard(t) for t in dirty_old}
         if vanished.size:
-            for s in dirty_old:     # vanished pairs were affected-old
-                self._keys[s] = np.setdiff1d(self._keys[s], vanished,
-                                             assume_unique=True)
+            for s in sorted(dirty):  # vanished pairs were affected-old
+                okeys[s] = np.setdiff1d(okeys[s], vanished,
+                                        assume_unique=True)
         if appeared.size:
             pending: dict[int, list[int]] = {}
             # locality first — an appeared pair joins the shard already
@@ -2018,7 +2105,7 @@ class PartitionedEngineSession:
             # within 1.25x of the mean load; past it, spill to the
             # lightest shard so sustained churn cannot concentrate the
             # whole pair space onto one device
-            cap = 1.25 * (sum(self._load) / self.ndev) + 1.0
+            cap = 1.25 * (sum(self._load) / len(self._load)) + 1.0
             for k in appeared.tolist():
                 u, v = divmod(k, n)
                 s = touched_owner.get(u, touched_owner.get(v))
@@ -2030,18 +2117,10 @@ class PartitionedEngineSession:
                 self._load[s] += int(space_new.counts[idx])
                 pending.setdefault(s, []).append(k)
             for s, ks in pending.items():
-                self._keys[s] = np.union1d(self._keys[s],
-                                           np.asarray(ks, np.int64))
+                okeys[s] = np.union1d(okeys[s],
+                                      np.asarray(ks, np.int64))
                 dirty.add(s)
-        # one global cost scan shared by every dirty shard's refresh
-        # (extract_shard would otherwise recount it per shard)
-        costs_new = postprune_pair_counts(space_new)
-        for s in sorted(dirty):
-            ids = np.searchsorted(key_all_new, self._keys[s])
-            self._shards[s] = extract_shard(space_new, ids, index=s,
-                                            costs=costs_new)
-            self._load[s] = self._shards[s].items
-        self._upload_shards(sorted(dirty))
+        self._refresh_shards(sorted(dirty), space_new, key_all_new)
 
         # ---- new-side recount (owners of every affected new pair are,
         # by construction, in the refreshed dirty set)
@@ -2058,3 +2137,91 @@ class PartitionedEngineSession:
                         self._cache_size() - cache0)
         self._maybe_rebalance()
         return self._census.copy()
+
+
+class PartitionedEngineSession2D(PartitionedEngineSession):
+    """2D-partition-resident session: device = tile (pair shard × vertex
+    slice), ownership = pair shard.
+
+    Every device-facing mechanism of :class:`PartitionedEngineSession`
+    — fixed-capacity grow-once buffers, async per-tile dispatch, the
+    bounded-in-flight drain, host int64 merge — runs verbatim over the
+    flat tile list (tile ``(s, j)`` at device ``s * V + j``).  What the
+    second axis changes is *bookkeeping*: a pair belongs to one pair
+    shard (``_ownership`` tracks per-shard key sets), its items split
+    across that shard's ``V`` tiles by witness vertex range, and its
+    closed-form base term is credited to one designated tile
+    (:func:`repro.core.partition.slice_pair_terms`) so per-tile bases
+    stay subset-additive.
+
+    :meth:`update` routes deltas to ``(owner shard, touched slices)``:
+    affected pairs recount only on the tiles whose vertex slice actually
+    holds some of their items (a tile without them never appears in the
+    key lookup, so it dispatches nothing), and a dirty shard re-extracts
+    all of its slice tiles together against the session's pinned vertex
+    bounds, keeping each pair's designated-slice term consistent within
+    the shard.  Bit-identical to the 1D and unpartitioned sessions on
+    every backend, orient and emit mode.
+    """
+
+    def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
+                 mesh_shape: tuple, **kwargs):
+        mesh_shape = (int(mesh_shape[0]), int(mesh_shape[1]))
+        if mesh_shape[0] * mesh_shape[1] != engine.ndev:
+            raise ValueError(
+                f"mesh_shape {mesh_shape} needs "
+                f"{mesh_shape[0] * mesh_shape[1]} devices; the engine "
+                f"has {engine.ndev}")
+        self.mesh_shape = mesh_shape
+        super().__init__(engine, g, **kwargs)
+
+    def _make_partition(self, space):
+        return partition_graph_2d(space=space,
+                                  mesh_shape=self.mesh_shape)
+
+    def _set_ownership(self, part) -> None:
+        num_shards, num_slices = self.mesh_shape
+        self._vertex_bounds = np.asarray(part.vertex_bounds,
+                                         dtype=np.int64)
+        space = part.space
+        key_all = (space.pair_u.astype(np.int64) * space.n
+                   + space.pair_v)
+        self._shard_keys = [np.sort(key_all[part.owner == s])
+                            for s in range(num_shards)]
+        self._load = [sum(self._shards[s * num_slices + j].items
+                          for j in range(num_slices))
+                      for s in range(num_shards)]
+
+    def _tile_shard(self, s: int) -> int:
+        return s // self.mesh_shape[1]
+
+    def _ownership(self) -> list:
+        return self._shard_keys
+
+    def _refresh_shards(self, dirty, space_new, key_all_new) -> None:
+        """Re-extract every vertex-slice tile of each dirty pair shard
+        against the session's pinned slice bounds (one shard's tiles are
+        a unit: the designated base-term slice of any of its pairs must
+        agree across them), then re-upload just those tiles."""
+        num_slices = self.mesh_shape[1]
+        bounds = self._vertex_bounds
+        terms = slice_pair_terms(space_new, bounds)
+        slice_costs = [range_postprune_pair_counts(
+            space_new, int(bounds[j]), int(bounds[j + 1]))
+            for j in range(num_slices)]
+        tiles = []
+        for s in dirty:
+            ids = np.searchsorted(key_all_new, self._shard_keys[s])
+            load = 0
+            for j in range(num_slices):
+                t = s * num_slices + j
+                sh = extract_shard(
+                    space_new, ids, index=t, costs=slice_costs[j],
+                    vertex_range=(int(bounds[j]), int(bounds[j + 1])),
+                    pair_term=terms[j])
+                self._shards[t] = sh
+                self._keys[t] = sh.keys
+                load += sh.items
+                tiles.append(t)
+            self._load[s] = load
+        self._upload_shards(tiles)

@@ -46,7 +46,9 @@ import numpy as np
 
 from repro.core.digraph import CompactDigraph
 from repro.core.planner import (
-    PairSpace, make_pair_space, pair_space, postprune_pair_counts)
+    PairSpace, make_pair_space, pair_space, postprune_pair_counts,
+    range_postprune_pair_counts, range_preprune_pair_counts)
+from repro.core.planner import _entry_keys as planner_entry_keys
 
 
 def graph_bytes(indptr_len: int, entries: int, pairs: int) -> int:
@@ -159,6 +161,12 @@ def lpt_assign(costs, num_shards: int) -> np.ndarray:
     owner = np.zeros(costs.shape[0], dtype=np.int64)
     if num_shards == 1 or costs.size == 0:
         return owner
+    if costs.size and int(costs.max()) == 0:
+        # all-zero costs (empty pair space after pruning, fully-pruned
+        # shard): every assignment has zero makespan — return the
+        # all-zeros owner the heap oracle produces instead of feeding
+        # degenerate buckets to the radix path
+        return owner
     if costs.shape[0] <= _LPT_EXACT_HEAD:
         return lpt_assign_heap(costs, num_shards)
     ns = int(num_shards)
@@ -193,6 +201,63 @@ def lpt_assign(costs, num_shards: int) -> np.ndarray:
     return owner
 
 
+def vertex_slices(space: PairSpace, num_slices: int) -> np.ndarray:
+    """Entry-mass-balanced vertex slice bounds, (V+1,) int64.
+
+    Slice ``j`` owns witness ids ``[bounds[j], bounds[j+1])``.  Bounds
+    are chosen so each slice receives ~equal CSR *entry mass* (how many
+    adjacency entries point into it — exactly the halo bytes the 2D
+    decomposition shards), via quantiles of the cumulative in-mass.
+    Granularity is one vertex: a single hub id's mass cannot split, so a
+    slice holding it may exceed the ideal share by that hub's in-degree.
+    """
+    if num_slices < 1:
+        raise ValueError(f"num_slices must be >= 1, got {num_slices}")
+    n = space.n
+    bounds = np.zeros(num_slices + 1, dtype=np.int64)
+    bounds[-1] = n
+    if num_slices == 1 or n == 0:
+        return bounds
+    mass = np.bincount(space.nbr, minlength=n).astype(np.int64)
+    cmass = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(mass, out=cmass[1:])
+    total = int(cmass[-1])
+    if total == 0:
+        bounds[:] = np.round(
+            np.linspace(0, n, num_slices + 1)).astype(np.int64)
+        return bounds
+    targets = (np.arange(1, num_slices, dtype=np.int64) * total
+               ) // num_slices
+    cuts = np.searchsorted(cmass, targets, side="left")
+    bounds[1:-1] = np.minimum(np.maximum.accumulate(cuts), n)
+    return bounds
+
+
+def slice_pair_terms(space: PairSpace, vertex_bounds: np.ndarray
+                     ) -> list[np.ndarray]:
+    """Designated-slice split of ``space.pair_term``: V arrays of shape
+    (P,) summing elementwise to the global terms.
+
+    Each pair's full closed-form dyadic term is credited to the *first*
+    vertex slice holding any of its pre-prune items (every pair has at
+    least ``deg_u + deg_v >= 2`` items, so a designated slice always
+    exists) and zeroed elsewhere — the tile that keeps the pair in that
+    slice carries the term, so :func:`repro.core.planner.base_for_pairs`
+    sums exactly across a shard's tiles.
+    """
+    bounds = np.asarray(vertex_bounds, dtype=np.int64).ravel()
+    num_slices = bounds.shape[0] - 1
+    if num_slices == 1:
+        return [space.pair_term.copy()]
+    pre = np.stack([range_preprune_pair_counts(
+        space, int(bounds[j]), int(bounds[j + 1])) > 0
+        for j in range(num_slices)])
+    first = np.argmax(pre, axis=0) if space.num_pairs else np.zeros(
+        0, dtype=np.int64)
+    return [np.where(first == j, space.pair_term, 0)
+            for j in range(num_slices)]
+
+
 @dataclass(frozen=True)
 class LocalShard:
     """One device's private slice of the census: the pairs it owns and the
@@ -215,6 +280,7 @@ class LocalShard:
     graph: CompactDigraph      #: relabeled local CSR
     space: PairSpace           #: local pair space over ``graph``
     items: int                 #: post-prune work items owned
+    vertex_range: tuple | None = None  #: (lo, hi) witness slice, 2D only
 
     @property
     def num_pairs(self) -> int:
@@ -228,7 +294,9 @@ class LocalShard:
 
 
 def extract_shard(space: PairSpace, pair_ids, index: int = 0,
-                  costs: np.ndarray | None = None) -> LocalShard:
+                  costs: np.ndarray | None = None, *,
+                  vertex_range: tuple | None = None,
+                  pair_term: np.ndarray | None = None) -> LocalShard:
     """Extract the minimal local subgraph of a pair subset of ``space``.
 
     ``pair_ids`` (any order; sorted internally) index the global space's
@@ -238,26 +306,73 @@ def extract_shard(space: PairSpace, pair_ids, index: int = 0,
     vertex ids, so a monotone injection changes no per-item decision.
     ``costs`` (the global :func:`postprune_pair_counts`) avoids an
     O(P log m) recount per shard when the caller already has it.
+
+    ``vertex_range=(lo, hi)`` is the **slice-aware variant** behind the
+    2D decomposition: endpoint rows are restricted to their neighbor
+    entries with ids in ``[lo, hi)`` (rows are sorted, so each restriction
+    is one contiguous run), and pairs with *no* pre-prune item in the
+    range are dropped, so pair-array bytes shard with the vertex axis
+    too.  Restricting a sorted row to an id range keeps it sorted and —
+    because every item's witness lies in the range — keeps the kernel's
+    binary search of the co-endpoint row exact (``w ∈ sliced row ⟺
+    w ∈ global row`` for in-range ``w``), so per-item decisions, and the
+    union of the tiles' item spaces over a slicing of ``[0, n)``, are
+    bit-identical to the unsliced shard.  When slicing, ``costs`` must be
+    the matching :func:`range_postprune_pair_counts` (computed here when
+    omitted), and ``pair_term`` may override the global per-pair base
+    terms with a designated-slice split (:func:`slice_pair_terms`) so
+    per-tile bases stay additive across the vertex axis.
     """
     ids = np.sort(np.asarray(pair_ids, dtype=np.int64).ravel())
     if ids.size and (ids[0] < 0 or ids[-1] >= space.num_pairs):
         raise ValueError(f"pair id outside [0, {space.num_pairs})")
-    pu, pv = space.pair_u[ids], space.pair_v[ids]
+    deg = space.deg.astype(np.int64)
+    if vertex_range is None:
+        if costs is None:
+            costs = postprune_pair_counts(space)
+        pu, pv = space.pair_u[ids], space.pair_v[ids]
+        ends = (np.unique(np.concatenate([pu, pv])) if ids.size
+                else np.zeros(0, dtype=np.int64))
+        row_start = space.indptr[ends].astype(np.int64)
+        row_deg = deg[ends]
+    else:
+        lo_v, hi_v = int(vertex_range[0]), int(vertex_range[1])
+        if not 0 <= lo_v <= hi_v <= space.n:
+            raise ValueError(
+                f"vertex range [{lo_v}, {hi_v}) outside [0, {space.n}]")
+        vertex_range = (lo_v, hi_v)
+        if costs is None:
+            costs = range_postprune_pair_counts(space, lo_v, hi_v)
+        key = planner_entry_keys(space)
+        n64 = int(space.n)
+
+        def cnt(rows, a, b):
+            return (np.searchsorted(key, rows * n64 + b)
+                    - np.searchsorted(key, rows * n64 + a))
+
+        pu = space.pair_u[ids].astype(np.int64)
+        pv = space.pair_v[ids].astype(np.int64)
+        # a pair with zero pre-prune items in the slice contributes
+        # nothing here (its items live in other slices) — drop it so the
+        # pair arrays shard along the vertex axis as well
+        keep = (cnt(pu, lo_v, hi_v) + cnt(pv, lo_v, hi_v)) > 0
+        ids = ids[keep]
+        pu, pv = pu[keep], pv[keep]
+        ends = (np.unique(np.concatenate([pu, pv])) if ids.size
+                else np.zeros(0, dtype=np.int64))
+        below = np.searchsorted(key, ends * n64 + lo_v) - space.indptr[ends]
+        row_deg = cnt(ends, lo_v, hi_v).astype(np.int64)
+        row_start = (space.indptr[ends] + below).astype(np.int64)
     keys = pu * space.n + pv
-    if costs is None:
-        costs = postprune_pair_counts(space)
     items = int(costs[ids].sum()) if ids.size else 0
 
-    deg = space.deg.astype(np.int64)
-    ends = (np.unique(np.concatenate([pu, pv])) if ids.size
-            else np.zeros(0, dtype=np.int64))
-    row_deg = deg[ends]
     total = int(row_deg.sum())
     loc_off = np.zeros(ends.shape[0] + 1, dtype=np.int64)
     np.cumsum(row_deg, out=loc_off[1:])
-    # slots of the endpoints' rows, in (endpoint asc, within-row asc)
-    # order — exactly local CSR order after relabeling
-    slot = (np.repeat(space.indptr[ends] - loc_off[:-1], row_deg)
+    # slots of the endpoints' (possibly range-restricted) rows, in
+    # (endpoint asc, within-row asc) order — exactly local CSR order
+    # after relabeling
+    slot = (np.repeat(row_start - loc_off[:-1], row_deg)
             + np.arange(total, dtype=np.int64))
     rows_packed = space.packed[slot].astype(np.int64)
     nbrs = rows_packed >> 2
@@ -277,13 +392,16 @@ def extract_shard(space: PairSpace, pair_ids, index: int = 0,
         # endpoints appear from each side (informational only)
         num_arcs=int(((rows_packed & 1) != 0).sum()))
 
+    term_src = (space.pair_term if pair_term is None
+                else np.asarray(pair_term, dtype=np.int64).ravel())
     space_loc = make_pair_space(
         g_loc, np.searchsorted(verts, pu), np.searchsorted(verts, pv),
         space.pair_code[ids].copy(), orient=space.orient,
         prune_self=space.prune_self,
-        pair_term=space.pair_term[ids].copy())
+        pair_term=term_src[ids].copy())
     return LocalShard(index=index, pair_ids=ids, keys=keys, verts=verts,
-                      graph=g_loc, space=space_loc, items=items)
+                      graph=g_loc, space=space_loc, items=items,
+                      vertex_range=vertex_range)
 
 
 @dataclass(frozen=True)
@@ -296,6 +414,18 @@ class PartitionStats:
     shard_pairs: tuple         #: per-shard owned pair counts
     shard_bytes: tuple         #: per-shard resident graph bytes
     replicated_bytes: int      #: per-device bytes of the replicated path
+    mesh_shape: tuple | None = None  #: (pair_shards, vertex_slices); 2D only
+    shard_entries: tuple = ()  #: per-shard resident packed CSR entries
+    total_entries: int = 0     #: global packed CSR entries (halo denom)
+
+    @property
+    def entry_replication(self) -> float:
+        """Halo blow-up: total resident CSR entry copies across shards /
+        global entries (1.0 == no replication; the 2D vertex axis exists
+        to pull this down)."""
+        if not self.shard_entries or not self.total_entries:
+            return 1.0
+        return sum(self.shard_entries) / self.total_entries
 
     @property
     def max_over_mean(self) -> float:
@@ -316,13 +446,30 @@ class PartitionStats:
         return self.replicated_bytes / max(self.max_shard_bytes, 1)
 
     def report(self) -> str:
-        """Human-readable shard table + balance/residency summary."""
-        lines = [f"{'shard':>5} {'pairs':>9} {'items':>11} "
-                 f"{'graph_bytes':>12}"]
+        """Human-readable shard table + balance/residency summary; tiles
+        of a 2D partition are labeled by their (pair shard, vertex slice)
+        mesh coordinates."""
+        two_d = self.mesh_shape is not None
+        head = f"{'tile':>7}" if two_d else f"{'shard':>5}"
+        lines = [f"{head} {'pairs':>9} {'items':>11} {'graph_bytes':>12}"]
         for s in range(self.num_shards):
-            lines.append(f"{s:>5} {self.shard_pairs[s]:>9} "
+            label = (f"{s // self.mesh_shape[1]:>3},{s % self.mesh_shape[1]}"
+                     if two_d else f"{s:>5}")
+            lines.append(f"{label:>7} {self.shard_pairs[s]:>9} "
+                         f"{self.shard_items[s]:>11} "
+                         f"{self.shard_bytes[s]:>12}"
+                         if two_d else
+                         f"{label} {self.shard_pairs[s]:>9} "
                          f"{self.shard_items[s]:>11} "
                          f"{self.shard_bytes[s]:>12}")
+        if two_d:
+            lines.append(f"mesh={self.mesh_shape[0]}x{self.mesh_shape[1]} "
+                         f"(pair shards x vertex slices)")
+        if self.shard_entries and self.total_entries:
+            lines.append(
+                f"halo: resident entries={sum(self.shard_entries)} "
+                f"global={self.total_entries} "
+                f"(replication {self.entry_replication:.2f}x)")
         lines.append(
             f"items max/mean={self.max_over_mean:.3f} "
             f"resident_bytes max={self.max_shard_bytes} "
@@ -384,9 +531,130 @@ def partition_graph(g: CompactDigraph | None = None, num_shards: int = 1,
         shard_items=tuple(sh.items for sh in shards),
         shard_pairs=tuple(sh.num_pairs for sh in shards),
         shard_bytes=tuple(sh.resident_bytes for sh in shards),
-        replicated_bytes=replicated_graph_bytes(space))
+        replicated_bytes=replicated_graph_bytes(space),
+        shard_entries=tuple(sh.graph.packed.shape[0] for sh in shards),
+        total_entries=int(space.packed.shape[0]))
     return GraphPartition(space=space, shards=shards, owner=owner,
                           stats=stats)
+
+
+@dataclass(frozen=True)
+class GraphPartition2D:
+    """A graph partitioned over a ``(pair_shards, vertex_slices)`` mesh.
+
+    ``shards`` is the **flat** tile list — tile ``(s, j)`` (pair shard
+    ``s``, vertex slice ``j``) sits at index ``s * V + j`` — so every
+    consumer of the 1D partition's shard list (``ShardSchedule``,
+    ``stacked_device_arrays``, the async/lock-step/megastep dispatch
+    paths) runs unmodified over the 2D tile set; only ownership
+    bookkeeping (one pair shard owns a pair, its V tiles split the
+    pair's witness range) knows about the second axis.
+    """
+
+    space: PairSpace           #: the global pair space
+    mesh_shape: tuple          #: (P, V) = (pair shards, vertex slices)
+    vertex_bounds: np.ndarray  #: (V+1,) slice boundaries over [0, n)
+    shards: list               #: list[LocalShard], P*V tiles, flat s*V+j
+    owner: np.ndarray          #: (P,) pair shard owning each global pair
+    stats: PartitionStats
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def pair_shards(self) -> int:
+        return int(self.mesh_shape[0])
+
+    @property
+    def num_vertex_slices(self) -> int:
+        return int(self.mesh_shape[1])
+
+    def tile(self, shard: int, vslice: int) -> LocalShard:
+        """The tile of pair shard ``shard`` × vertex slice ``vslice``."""
+        return self.shards[shard * self.num_vertex_slices + vslice]
+
+
+def partition_graph_2d(g: CompactDigraph | None = None,
+                       mesh_shape: tuple = (1, 1),
+                       orient: str = "none", prune_self: bool = True, *,
+                       space: PairSpace | None = None,
+                       owner: np.ndarray | None = None,
+                       vertex_bounds: np.ndarray | None = None
+                       ) -> GraphPartition2D:
+    """Partition census work over a ``(pair_shards, vertex_slices)`` mesh.
+
+    The pair axis reuses the 1D machinery verbatim: greedy LPT over the
+    exact global post-prune costs assigns each pair one owner shard.  The
+    vertex axis then splits every shard's *item space*: tile ``(s, j)``
+    extracts shard ``s``'s pairs restricted to witness ids in slice
+    ``j``'s range (:func:`extract_shard` with ``vertex_range``), so hub
+    halo rows — which the 1D split replicates into every shard owning one
+    of their pairs — are themselves sliced ``V`` ways.  Per-pair dyadic
+    base terms are credited to one designated tile per pair
+    (:func:`slice_pair_terms`) so per-tile bases stay additive.  ``owner``
+    overrides the LPT with an explicit (P,) pair→shard assignment and
+    ``vertex_bounds`` overrides the entry-mass-balanced slice boundaries
+    (:func:`vertex_slices`); the census is exact for any choice of both —
+    only balance and residency change.
+    """
+    num_pair_shards, num_slices = int(mesh_shape[0]), int(mesh_shape[1])
+    if num_pair_shards < 1 or num_slices < 1:
+        raise ValueError(f"mesh_shape must be >= (1, 1), got {mesh_shape}")
+    if space is None:
+        if g is None:
+            raise ValueError("need a graph or a prebuilt pair space")
+        space = pair_space(g, orient=orient, prune_self=prune_self)
+    costs = postprune_pair_counts(space)
+    if owner is None:
+        owner = lpt_assign(costs, num_pair_shards)
+    else:
+        owner = np.asarray(owner, dtype=np.int64).ravel()
+        if owner.shape[0] != space.num_pairs:
+            raise ValueError(
+                f"owner has {owner.shape[0]} entries for "
+                f"{space.num_pairs} pairs")
+        if owner.size and (owner.min() < 0
+                           or owner.max() >= num_pair_shards):
+            raise ValueError(
+                f"owner shard outside [0, {num_pair_shards})")
+    if vertex_bounds is None:
+        vertex_bounds = vertex_slices(space, num_slices)
+    else:
+        vertex_bounds = np.asarray(vertex_bounds, dtype=np.int64).ravel()
+        if (vertex_bounds.shape[0] != num_slices + 1
+                or vertex_bounds[0] != 0 or vertex_bounds[-1] != space.n
+                or (np.diff(vertex_bounds) < 0).any()):
+            raise ValueError(
+                f"vertex_bounds must be a monotone ({num_slices + 1},) "
+                f"cover of [0, {space.n}]")
+    terms = slice_pair_terms(space, vertex_bounds)
+    slice_costs = [range_postprune_pair_counts(
+        space, int(vertex_bounds[j]), int(vertex_bounds[j + 1]))
+        for j in range(num_slices)]
+    tiles = []
+    for s in range(num_pair_shards):
+        sids = np.nonzero(owner == s)[0]
+        for j in range(num_slices):
+            tiles.append(extract_shard(
+                space, sids, index=s * num_slices + j,
+                costs=slice_costs[j],
+                vertex_range=(int(vertex_bounds[j]),
+                              int(vertex_bounds[j + 1])),
+                pair_term=terms[j]))
+    stats = PartitionStats(
+        num_shards=len(tiles), total_items=int(costs.sum()),
+        shard_items=tuple(t.items for t in tiles),
+        shard_pairs=tuple(t.num_pairs for t in tiles),
+        shard_bytes=tuple(t.resident_bytes for t in tiles),
+        replicated_bytes=replicated_graph_bytes(space),
+        mesh_shape=(num_pair_shards, num_slices),
+        shard_entries=tuple(t.graph.packed.shape[0] for t in tiles),
+        total_entries=int(space.packed.shape[0]))
+    return GraphPartition2D(
+        space=space, mesh_shape=(num_pair_shards, num_slices),
+        vertex_bounds=vertex_bounds, shards=tiles, owner=owner,
+        stats=stats)
 
 
 def stacked_device_arrays(shards) -> tuple[np.ndarray, ...]:

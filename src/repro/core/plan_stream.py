@@ -201,10 +201,21 @@ class ShardSchedule:
       the max.
     """
 
-    def __init__(self, spaces, max_items: int | None, num_devices: int):
+    def __init__(self, spaces, max_items: int | None, num_devices: int,
+                 mesh_shape: tuple | None = None):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
         self.spaces = list(spaces)
+        if mesh_shape is not None and (
+                int(mesh_shape[0]) * int(mesh_shape[1]) != len(self.spaces)):
+            raise ValueError(
+                f"mesh_shape {tuple(mesh_shape)} does not cover "
+                f"{len(self.spaces)} shard spaces")
+        #: (pair_shards, vertex_slices) when the spaces are 2D tiles in
+        #: flat s*V+j order; queue s then serves tile
+        #: :meth:`tile_coords`(s) — geometry and dispatch are unchanged
+        self.mesh_shape = (tuple(int(x) for x in mesh_shape)
+                           if mesh_shape is not None else None)
         w_max = max((s.num_items_preprune for s in self.spaces), default=0)
         budget = (-(-int(max_items) // num_devices)
                   if max_items is not None else max(w_max, 1))
@@ -228,6 +239,13 @@ class ShardSchedule:
     @property
     def num_shards(self) -> int:
         return len(self.spaces)
+
+    def tile_coords(self, s: int) -> tuple:
+        """Shard index → (pair shard, vertex slice) mesh coordinates;
+        identity-on-axis-0 for 1D schedules (slice 0)."""
+        if self.mesh_shape is None:
+            return (s, 0)
+        return (s // self.mesh_shape[1], s % self.mesh_shape[1])
 
     def steps_for(self, s: int) -> int:
         """Shard ``s``'s REAL step count: the windows that actually carry
@@ -422,6 +440,18 @@ class ShardStreamPipeline:
             t.start()
             self._threads.append(t)
 
+    def _offer(self, q: queue.Queue, item) -> bool:
+        """Stop-aware put: lands ``item`` or gives up once :meth:`close`
+        has been called (the consumer is gone — nobody will ever drain a
+        full queue, so an unconditional put would strand the thread)."""
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _produce(self, q: queue.Queue, source) -> None:
         try:
             for window in source:
@@ -440,9 +470,9 @@ class ShardStreamPipeline:
                 if self._stop.is_set():
                     return
         except BaseException as exc:     # surfaced to the consumer
-            q.put(exc)
+            self._offer(q, exc)
             return
-        q.put(_STREAM_DONE)
+        self._offer(q, _STREAM_DONE)
 
     def _resolve(self, item, s: int):
         if item is _STREAM_DONE:
@@ -478,8 +508,22 @@ class ShardStreamPipeline:
                     yield got
 
     def close(self) -> None:
-        """Stop the producers (idempotent); safe mid-iteration."""
+        """Stop the producers, drain the queues, and join the threads
+        (idempotent); safe mid-iteration.
+
+        Draining matters: a producer blocked on a full queue — including
+        one trying to land its terminal exception or ``_STREAM_DONE``
+        sentinel — frees up immediately instead of spinning out its stop
+        timeout, and the join below then reaps every thread even when a
+        producer raised after the consumer stopped iterating.
+        """
         self._stop.set()
+        for q in self._queues:
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
         for t in self._threads:
             t.join(timeout=1.0)
 

@@ -254,6 +254,86 @@ def postprune_pair_counts(space: PairSpace) -> np.ndarray:
     return side0 + side1
 
 
+def _entry_keys(space: PairSpace) -> np.ndarray:
+    """Globally sorted ``row * n + nbr`` keys of every CSR entry — the
+    O(1)-per-query index behind the range-restricted pair counts."""
+    rows = np.repeat(np.arange(space.n, dtype=np.int64),
+                     space.deg.astype(np.int64))
+    return rows * space.n + space.nbr.astype(np.int64)
+
+
+def range_preprune_pair_counts(space: PairSpace, lo: int, hi: int
+                               ) -> np.ndarray:
+    """Pre-prune items per pair whose witness id lies in ``[lo, hi)``.
+
+    The per-slice analogue of ``space.counts``: for each pair (u, v) it
+    counts the entries of N(u) and N(v) inside the vertex range — the
+    item population a 2D vertex slice owns *before* pruning.  Over a
+    partition of ``[0, n)`` into slices these sum to ``space.counts``
+    exactly, which is what makes the 2D tile item spaces a partition of
+    each pair's global item space.
+    """
+    if not 0 <= lo <= hi <= space.n:
+        raise ValueError(f"vertex range [{lo}, {hi}) outside [0, {space.n}]")
+    if space.num_pairs == 0:
+        return np.zeros(0, dtype=np.int64)
+    key = _entry_keys(space)
+    n = space.n
+
+    def cnt(rows, a, b):
+        return (np.searchsorted(key, rows * n + b)
+                - np.searchsorted(key, rows * n + a))
+
+    return cnt(space.pair_u, lo, hi) + cnt(space.pair_v, lo, hi)
+
+
+def range_postprune_pair_counts(space: PairSpace, lo: int, hi: int
+                                ) -> np.ndarray:
+    """Exact post-prune items per pair restricted to witnesses in
+    ``[lo, hi)`` — the per-slice cost closed form of the 2D decomposition.
+
+    Mirrors :func:`postprune_pair_counts` with every row count replaced
+    by its range restriction and every co-endpoint ``- 1`` replaced by a
+    membership test (in a sliced row the co-endpoint may fall *outside*
+    the range, so the unconditional subtraction of the global closed form
+    would undercount).  Over a partition of ``[0, n)`` into slices these
+    sum to :func:`postprune_pair_counts` exactly — the additivity the 2D
+    engine's per-tile partials rely on.
+    """
+    if not 0 <= lo <= hi <= space.n:
+        raise ValueError(f"vertex range [{lo}, {hi}) outside [0, {space.n}]")
+    if space.num_pairs == 0:
+        return np.zeros(0, dtype=np.int64)
+    key = _entry_keys(space)
+    n = space.n
+    pu = space.pair_u
+    pv = space.pair_v
+
+    def cnt(rows, a, b):
+        return (np.searchsorted(key, rows * n + b)
+                - np.searchsorted(key, rows * n + a))
+
+    c_u = cnt(pu, lo, hi)
+    c_v = cnt(pv, lo, hi)
+
+    def in_range(x):
+        return ((x >= lo) & (x < hi)).astype(np.int64)
+
+    if space.orient != "degree":
+        if not space.prune_self:
+            return c_u + c_v
+        return c_u + c_v - in_range(pv) - in_range(pu)
+    inter = (space.pair_code >> INTER_SIDE_BIT) & 1
+    # witness side keeps its in-range non-self entries; the other side
+    # keeps only in-range entries past the co-endpoint (prune_items'
+    # ``can_count`` predicate, range-restricted)
+    side0 = np.where(inter == 0, c_u - in_range(pv),
+                     cnt(pu, np.clip(pv + 1, lo, hi), hi))
+    side1 = np.where(inter == 1, c_v - in_range(pu),
+                     cnt(pv, np.clip(pu + 1, lo, hi), hi))
+    return side0 + side1
+
+
 def emit_items(space: PairSpace, lo: int, hi: int
                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Materialize pre-prune item range ``[lo, hi)`` with pruning applied.
@@ -360,13 +440,16 @@ DESC_CUM_PAD = 2**31 - 1
 #: anchor-table stride for the in-kernel item→descriptor lookup: one
 #: precomputed anchor per ``DESC_ANCHOR_STRIDE`` flat items narrows the
 #: per-lane lower-bound search from the whole descriptor table to the
-#: <= stride/2 + 1 descriptors that can overlap one stride span (every
-#: pair spans >= 2 pre-prune items), making the unrolled search depth a
-#: small CONSTANT independent of the window's pair count
+#: <= stride + 1 descriptors that can overlap one stride span (every
+#: descriptor spans >= 1 pre-prune item — 2D vertex-sliced tiles keep
+#: pairs whose in-slice item count is exactly 1, so the tighter
+#: stride/2 + 1 bound of the global >= 2 items-per-pair invariant does
+#: not apply), making the unrolled search depth a small CONSTANT
+#: independent of the window's pair count
 DESC_ANCHOR_STRIDE = 16
 
 #: unrolled lower-bound depth sufficient for any anchored search range
-DESC_SEARCH_ITERS = int(np.ceil(np.log2(DESC_ANCHOR_STRIDE // 2 + 2)))
+DESC_SEARCH_ITERS = int(np.ceil(np.log2(DESC_ANCHOR_STRIDE + 2)))
 
 
 def num_desc_anchors(chunk_shape: int) -> int:
