@@ -722,6 +722,127 @@ def mega_smoke(rows: list):
                  f"idle_steps={st_lock.idle_steps};parity=ok"))
 
 
+def fault_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --fault-smoke): the fault-tolerance
+    layer on an 8-virtual-device mesh must
+
+    * survive a seeded :class:`FaultPlan` carrying a producer plan-gen
+      error, a transient dispatch error AND a device retirement —
+      finishing bit-identical to the single-device census with >= 1
+      recorded failover (the dead device's queue drained by survivors),
+    * cost nothing when nothing fails: an armed engine (injection hooks
+      threaded, watchdog set, empty fault plan) within 1.05x of the
+      plain async walltime on the same workload, and
+    * resume: a run killed mid-stream with ``checkpoint=`` journaling
+      restores the landed windows and completes to the exact same
+      census, with > 0 resumed (journal-skipped) windows.
+    """
+    import os
+    import tempfile
+
+    import jax
+
+    from repro.core import (CensusEngine, FaultPlan, default_mesh,
+                            scale_free_digraph)
+
+    if len(jax.devices()) < 8:
+        raise AssertionError(
+            f"fault smoke needs 8 devices, have {len(jax.devices())} "
+            "(run via benchmarks/run.py, which forces them)")
+    g = scale_free_digraph(1500, 8.0, 2.1, seed=0)
+    max_items = 16_384
+    want = CensusEngine(backend="jnp").run(g)
+    mesh = default_mesh(8)
+
+    # plain async baseline (the PR 8 machinery, no fault layer armed)
+    # vs armed-but-idle: injection hooks fire on every producer/upload/
+    # dispatch event against an EMPTY plan, watchdog timers run — the
+    # pure overhead of carrying the fault-tolerance layer.  Single runs
+    # of this threaded pipeline jitter ~10% with host scheduling, so
+    # the bound is checked on the MEDIAN of 8 back-to-back paired
+    # ratios (pairing cancels load drift; the median sheds scheduler
+    # outliers)
+    plain = CensusEngine(mesh=mesh, backend="jnp", partition=True)
+    armed = CensusEngine(mesh=mesh, backend="jnp", partition=True,
+                         faults=FaultPlan(faults=[], seed=0),
+                         watchdog_timeout=30.0)
+    for eng, label in ((plain, "plain async"), (armed, "armed fault-free")):
+        got = eng.run(g, max_items=max_items)        # warmup / compile
+        if not (got == want).all():
+            raise AssertionError(f"{label} census != single-device")
+    ratios, ta = [], []
+    for _ in range(8):
+        t0 = time.perf_counter()
+        plain.run(g, max_items=max_items)
+        tp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        armed.run(g, max_items=max_items)
+        ta.append(time.perf_counter() - t0)
+        ratios.append(ta[-1] / tp)
+    dt_armed = min(ta)
+    overhead = float(np.median(ratios))
+    if overhead > 1.05:
+        raise AssertionError(
+            f"fault-free overhead {overhead:.3f}x plain async "
+            "(need <= 1.05x)")
+
+    # adversarial: producer error + transient dispatch error + one
+    # device retired mid-run — survivors drain its queue, merge order
+    # doesn't matter, census must not move a bit
+    adv = CensusEngine(mesh=mesh, backend="jnp", partition=True,
+                       faults=FaultPlan.seeded(
+                           7, 8, producer_errors=1, dispatch_errors=1,
+                           retire_devices=1))
+    dt_adv, got = _timeit(adv.run, g, max_items=max_items, reps=2)
+    if not (got == want).all():
+        raise AssertionError("faulted census != single-device")
+    st = adv.stats
+    if st.failovers < 1 or not st.retired_devices:
+        raise AssertionError(
+            f"seeded retirement did not fail over (failovers="
+            f"{st.failovers}, retired={st.retired_devices})")
+    if st.retries < 1:
+        raise AssertionError("seeded transient faults were not retried")
+
+    # checkpoint/resume: kill the run mid-stream, resume from the
+    # journal, land the exact same census with > 0 skipped windows
+    class _Killer:
+        def __init__(self, after):
+            self.after, self.calls = after, 0
+
+        def __call__(self, done, total, num=None):
+            self.calls += 1
+            if self.calls == self.after:
+                raise KeyboardInterrupt
+
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "census.ckpt")
+        eng = CensusEngine(mesh=mesh, backend="jnp", partition=True)
+        try:
+            eng.run(g, max_items=max_items, checkpoint=ck,
+                    progress=_Killer(8))
+        except KeyboardInterrupt:
+            pass
+        t0 = time.perf_counter()
+        got = eng.resume(g, ck, max_items=max_items)
+        dt_resume = time.perf_counter() - t0
+        if not (got == want).all():
+            raise AssertionError("resumed census != uninterrupted")
+        resumed = eng.stats.resumed_windows
+        if resumed < 1:
+            raise AssertionError(
+                "resume did not skip any journaled windows")
+
+    rows.append(("fault_smoke_adversarial", dt_adv * 1e6,
+                 f"retries={st.retries};failovers={st.failovers};"
+                 f"retired={sorted(st.retired_devices)};"
+                 f"windows={sum(st.shard_steps)};parity=ok"))
+    rows.append(("fault_smoke_overhead", dt_armed * 1e6,
+                 f"vs_plain_async={overhead:.3f}x;parity=ok"))
+    rows.append(("fault_smoke_resume", dt_resume * 1e6,
+                 f"resumed_windows={resumed};parity=ok"))
+
+
 def partition_smoke(rows: list):
     """CI gate (benchmarks/check.sh --partition-smoke): on an 8-virtual-
     host mesh, partitioned censuses must be bit-identical to the

@@ -64,6 +64,17 @@
 # (>= 2x at (2,4)) on the power-law workload, and no total resident-
 # byte regression at (4,2).
 #
+# The fault smoke (benchmarks/run.py --fault-smoke) arms the fault-
+# tolerance layer on an 8-virtual-device mesh and asserts three things:
+# a seeded FaultPlan carrying a producer plan-gen error, a transient
+# dispatch error and a device retirement finishes bit-identical to the
+# single-device census with >= 1 recorded failover (the dead device's
+# window queue drained by the survivors through their already-compiled
+# steps); an armed-but-idle engine (injection hooks threaded, watchdog
+# set, empty plan) stays within 1.05x of the plain async walltime; and
+# a run killed mid-stream with checkpoint journaling resumes to the
+# exact same census while skipping > 0 journaled windows.
+#
 # Usage: bash benchmarks/check.sh   (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -96,3 +107,6 @@ python -m benchmarks.run --mega-smoke
 
 echo "== 2d smoke (pair×vertex mesh == 1D == reference, >= 1.5x further halo cut) =="
 python -m benchmarks.run --2d-smoke
+
+echo "== fault smoke (inject + retry + fail over + resume, still bit-identical) =="
+python -m benchmarks.run --fault-smoke

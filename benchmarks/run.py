@@ -14,14 +14,22 @@ import os
 import sys
 
 
+#: every bench workload seeds its generators from this; recorded per
+#: JSON row so cross-PR comparisons only match rows with identical
+#: inputs
+BENCH_SEED = 0
+
+
 def write_json(path: str, rows: list) -> None:
     """Persist the benchmark rows as a ``BENCH_*.json``-style file: one
-    object per row (name, us_per_call, derived, backend)."""
+    object per row (name, us_per_call, derived, backend, jax_version,
+    seed)."""
     import jax
     backend = jax.default_backend()
     payload = [
         {"name": name, "us_per_call": round(us, 3), "derived": derived,
-         "backend": backend}
+         "backend": backend, "jax_version": jax.__version__,
+         "seed": BENCH_SEED}
         for name, us, derived in rows
     ]
     with open(path, "w") as f:
@@ -66,6 +74,15 @@ def main() -> None:
                          "must stay bit-identical, issue >= 2x fewer "
                          "dispatches than one-window async, and hold "
                          "within 1.15x of lock-step walltime")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="fault-tolerance gate: a seeded plan (producer "
+                         "error + transient dispatch error + one device "
+                         "retirement) on an 8-virtual-device mesh must "
+                         "finish bit-identical with >= 1 recorded "
+                         "failover; an armed-but-idle engine must stay "
+                         "within 1.05x of plain async; a run killed "
+                         "mid-stream must checkpoint-resume to the "
+                         "exact same census")
     ap.add_argument("--async-smoke", action="store_true",
                     help="async-schedule gate: on a synthetic 4x-skewed "
                          "8-shard partition, async per-shard streams "
@@ -92,7 +109,9 @@ def main() -> None:
 
     rows: list = []
     from benchmarks import census_bench
-    if args.twod_smoke:
+    if args.fault_smoke:
+        census_bench.fault_smoke(rows)
+    elif args.twod_smoke:
         census_bench.twod_smoke(rows)
     elif args.mega_smoke:
         census_bench.mega_smoke(rows)

@@ -20,6 +20,7 @@ items 3-9x.)
     PYTHONPATH=src python examples/network_monitor.py \
         --backend pallas-fused --stride 600 --verbose
     PYTHONPATH=src python examples/network_monitor.py --mesh 4 --stride 600
+    PYTHONPATH=src python examples/network_monitor.py --inject-faults 0
 """
 
 import argparse
@@ -84,6 +85,14 @@ def main():
                          "only its pair shard's local subgraph; delta "
                          "updates dispatch only the owning shards); "
                          "prints the per-window shard report")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    metavar="SEED",
+                    help="adversarial mode: deterministically inject "
+                         "transient dispatch failures, a poisoned "
+                         "result, and one burst long enough to exhaust "
+                         "the retry budget — the monitor must survive, "
+                         "retrying what it can and logging the rest as "
+                         "degraded windows instead of dying")
     ap.add_argument("--verbose", action="store_true",
                     help="print the per-window engine summary lines")
     args = ap.parse_args()
@@ -96,7 +105,8 @@ def main():
             os.environ["XLA_FLAGS"] = (
                 flags + f" --xla_force_host_platform_device_count="
                 f"{args.mesh}").strip()
-    from repro.core import SECURITY_PATTERNS, TriadMonitor, default_mesh
+    from repro.core import (
+        Fault, FaultPlan, SECURITY_PATTERNS, TriadMonitor, default_mesh)
 
     mesh = default_mesh(args.mesh) if args.mesh is not None else None
     rng = np.random.default_rng(0)
@@ -105,12 +115,34 @@ def main():
     # the trailing-history length to cover the same span of traffic
     stride = args.stride if args.stride is not None else per_window
     history = 10 * max(1, per_window // stride)
+    faults = None
+    if args.inject_faults is not None:
+        frng = np.random.default_rng(args.inject_faults)
+        ndev = args.mesh if args.mesh is not None else 1
+        dev = int(frng.integers(ndev))
+        # occurrences count DISPATCHES, not windows: each window's
+        # census is ~20-50 chunk dispatches on the defaults, and a
+        # failure in the very first window has no previous census to
+        # carry forward, so aim the burst well past it
+        burst = int(frng.integers(60, 200))
+        faults = FaultPlan(seed=args.inject_faults, faults=[
+            # a 3-deep consecutive burst outlasts the default retry
+            # budget (2) -> exactly one degraded window
+            *(Fault("dispatch", "error", device=dev, occurrence=burst + i)
+              for i in range(3)),
+            # a lone transient error and a poisoned result: both
+            # retried/re-dispatched invisibly
+            Fault("dispatch", "error", device=dev,
+                  occurrence=int(frng.integers(250, 400))),
+            Fault("dispatch", "poison", device=dev,
+                  occurrence=int(frng.integers(450, 600))),
+        ])
     monitor = TriadMonitor(
         n_hosts, window=per_window, stride=stride, history=history,
         threshold=args.threshold, backend=args.backend,
         incremental=not args.no_incremental,
         max_items=4096, emit=args.emit,
-        mesh=mesh, partition=mesh is not None)
+        mesh=mesh, partition=mesh is not None, faults=faults)
 
     scan_size = 200
     attack_windows = {25, 26, 27}
@@ -142,6 +174,10 @@ def main():
     print("\nper-window engine summary "
           "(items dispatched / full-recompute items):")
     for t, st in enumerate(monitor.window_stats):
+        if st is None:      # degraded window: census carried forward
+            print(f"  window {t:>3}  DEGRADED (census carried forward; "
+                  f"next window recomputes in full)")
+            continue
         total_items += st.items
         total_full += st.full_items
         fired = ",".join(f"{a['pattern']}(z={a['zscore']:.1f})"
@@ -165,11 +201,20 @@ def main():
           f"full per-window recomputes "
           f"({total_full / max(total_items, 1):.2f}x reduction); "
           f"chunk step compiles: "
-          f"{sum(s.step_compiles for s in monitor.window_stats)}")
+          f"{sum(s.step_compiles for s in monitor.window_stats if s)}")
+    if args.inject_faults is not None:
+        sess = monitor._session
+        print(f"\nfault injection (seed {args.inject_faults}): "
+              f"{sess.retries if sess else 0} retried dispatches, "
+              f"{len(monitor.degraded)} degraded window(s) — the stream "
+              f"survived")
+        for d in monitor.degraded:
+            print(f"  degraded window {d['window']}: {d['error']}")
     if mesh is not None and monitor.window_stats:
-        last = monitor.window_stats[-1]
+        last = next(s for s in reversed(monitor.window_stats)
+                    if s is not None)
         moms = [s.shard_max_over_mean for s in monitor.window_stats
-                if s.partitioned and s.items]
+                if s is not None and s.partitioned and s.items]
         print(f"\nshard report ({args.mesh}-device mesh, partitioned "
               f"graph): per-device resident graph bytes "
               f"{last.graph_resident_bytes} vs replicated "

@@ -45,8 +45,11 @@ from repro.core.planner import (
     descriptor_window, emit_items, emit_items_for_pairs,
     iter_descriptor_windows, pack_items, pair_space, unpack_items)
 from repro.core.plan_stream import (
-    PlanChunk, PlanChunker, ShardSchedule, ShardStreamPipeline,
-    WindowBatcher, iter_plan_chunks)
+    PlanChunk, PlanChunker, ProducerStalledError, ShardSchedule,
+    ShardStreamPipeline, WindowBatcher, iter_plan_chunks)
+from repro.core.faults import (
+    Fault, FaultError, FaultInjector, FaultPlan, InjectedFault)
+from repro.core.planner import PlanOverflowError
 from repro.core.census import (
     triad_census, assemble_census, census_partials_desc_batch)
 from repro.core.engine import (
@@ -78,8 +81,10 @@ __all__ = [
     "build_plan", "descriptor_window", "emit_items",
     "emit_items_for_pairs", "iter_descriptor_windows", "pack_items",
     "pair_space", "unpack_items",
-    "PlanChunk", "PlanChunker", "ShardSchedule", "ShardStreamPipeline",
-    "WindowBatcher", "iter_plan_chunks",
+    "PlanChunk", "PlanChunker", "ProducerStalledError", "ShardSchedule",
+    "ShardStreamPipeline", "WindowBatcher", "iter_plan_chunks",
+    "Fault", "FaultError", "FaultInjector", "FaultPlan", "InjectedFault",
+    "PlanOverflowError",
     "CensusEngine", "EMIT_MODES", "SCHEDULES", "EngineSession",
     "EngineStats", "PartitionedEngineSession",
     "PartitionedEngineSession2D",

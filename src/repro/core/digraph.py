@@ -75,15 +75,31 @@ def clean_arcs(src, dst, n: int | None = None
     matching the paper's preprocessing of the raw edge lists.  Returns
     ``(src, dst, n)`` with arcs sorted by ``src * n + dst``.
     """
-    src = np.asarray(src, dtype=np.int64).ravel()
-    dst = np.asarray(dst, dtype=np.int64).ravel()
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.dtype == object or dst.dtype == object:
+        raise ValueError(
+            "ragged edge arrays: src/dst must be rectangular numeric "
+            "arrays (got object dtype — rows of unequal length?)")
+    for name, a in (("src", src), ("dst", dst)):
+        if np.issubdtype(a.dtype, np.floating) \
+                and not np.isfinite(a).all():
+            raise ValueError(f"non-finite vertex id (NaN/inf) in {name}")
+    src = src.astype(np.int64).ravel()
+    dst = dst.astype(np.int64).ravel()
     if src.shape != dst.shape:
-        raise ValueError("src/dst length mismatch")
+        raise ValueError(
+            f"src/dst length mismatch: {src.shape[0]} != {dst.shape[0]}")
     if n is None:
         n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
     if src.size and (src.min() < 0 or dst.min() < 0
                      or max(src.max(), dst.max()) >= n):
-        raise ValueError("vertex id out of range")
+        bad = int(min(src.min(), dst.min()))
+        if bad >= 0:
+            bad = int(max(src.max(), dst.max()))
+        raise ValueError(
+            f"vertex id {bad} out of range [0, {n}) — ids must index "
+            f"the fixed n={n} vertex space")
     keep = src != dst
     src, dst = src[keep], dst[keep]
     eid = np.unique(src * n + dst)

@@ -83,12 +83,39 @@ def default_mesh(num_devices: int | None = None) -> Mesh:
     return Mesh(np.asarray(devs[:k]), ("devices",))
 
 
-def shard_report(part: GraphPartition | GraphPartition2D) -> str:
+def shard_report(part: GraphPartition | GraphPartition2D,
+                 stats=None) -> str:
     """Human-readable per-shard balance + residency table of a
     :func:`partition_graph` or :func:`partition_graph_2d` result (2D
     partitions label each row with its ``(pair_shard, vertex_slice)``
-    tile coordinate and add a resident-entry replication line)."""
-    return part.stats.report()
+    tile coordinate and add a resident-entry replication line).
+
+    Pass the run's :class:`~repro.core.engine.EngineStats` as ``stats``
+    to append a fault-tolerance section when anything went wrong:
+    retried windows, producer watchdog restarts, retired devices whose
+    queues failed over to the survivors, and checkpoint-resumed windows.
+    """
+    text = part.stats.report()
+    if stats is None:
+        return text
+    fired = (getattr(stats, "retries", 0)
+             or getattr(stats, "failovers", 0)
+             or getattr(stats, "watchdog_fires", 0)
+             or getattr(stats, "retired_devices", [])
+             or getattr(stats, "resumed_windows", 0))
+    if not fired:
+        return text
+    lines = ["", "fault tolerance:"]
+    if stats.retired_devices:
+        lines.append(f"  retired devices : {sorted(stats.retired_devices)}"
+                     " (queues drained by survivors)")
+    lines.append(f"  retries         : {stats.retries}")
+    lines.append(f"  failovers       : {stats.failovers}")
+    lines.append(f"  watchdog fires  : {stats.watchdog_fires}")
+    if stats.resumed_windows:
+        lines.append(f"  resumed windows : {stats.resumed_windows}"
+                     " (skipped via checkpoint)")
+    return text + "\n".join(lines)
 
 
 def triad_census_distributed(plan: CensusPlan, mesh: Mesh | None = None,

@@ -65,6 +65,10 @@ whose delta updates touch only the shards owning affected pairs.
 from __future__ import annotations
 
 import functools
+import json
+import os
+import time
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -78,6 +82,7 @@ from repro.core.census import (
     BACKENDS, assemble_census, assemble_counts,
     census_partials_desc_batch, desc_partials_fn, partials_fn)
 from repro.core.digraph import CompactDigraph, GraphDelta, apply_delta
+from repro.core.faults import FaultError, FaultPlan, poison_result
 from repro.core.incremental import (
     affected_pair_ids, combine, contribution_counts,
     subset_descriptor_windows)
@@ -87,7 +92,8 @@ from repro.core.partition import (
     replicated_graph_bytes,
     stacked_device_arrays)
 from repro.core.planner import (
-    DESC_BYTES, DESC_SEARCH_ITERS, CensusPlan, base_for_pairs,
+    DESC_BYTES, DESC_SEARCH_ITERS, CensusPlan, PlanOverflowError,
+    base_for_pairs,
     build_plan, emit_items, emit_items_for_pairs, global_bases,
     iter_descriptor_windows, max_pairs_per_window, num_desc_anchors,
     pad_and_pack, pair_space, postprune_pair_counts)
@@ -357,10 +363,22 @@ def _desc_capacity(chunk_shape: int, need: int) -> int:
 
 def _guard_chunk_shape(chunk_shape: int) -> int:
     if chunk_shape >= 2**31:
-        raise ValueError(
-            "chunk exceeds int32 item indexing; pass a smaller "
-            "max_items budget")
+        raise PlanOverflowError(
+            f"chunk_shape {chunk_shape} exceeds int32 item indexing and "
+            f"would silently wrap the per-window int32 accumulator "
+            f"lanes; pass a smaller max_items budget (< 2**31)")
     return chunk_shape
+
+
+def _validate_partials(hist, inter) -> None:
+    """Landing-time sanity check on fetched device partials: census
+    histogram and intersection lanes are counts and can never go
+    negative.  A corrupted (poisoned) result fails here, turning silent
+    wrong answers into a retryable :class:`FaultError`."""
+    if (hist < 0).any() or (inter < 0).any():
+        raise FaultError(
+            "device returned corrupted census partials (negative "
+            "counts); retrying the window")
 
 
 def _land_desc_partials(fut, hist_acc: np.ndarray, inter_acc: np.ndarray,
@@ -478,6 +496,16 @@ class EngineStats:
     #: the megabatch cap K in effect (``max_windows_per_dispatch``;
     #: 1 == no window batching, 0 == not an async/partitioned run)
     dispatch_batch_limit: int = 0
+    #: fault-tolerance record: window dispatches re-attempted after a
+    #: transient failure (injected or real), devices retired to the
+    #: survivors, watchdog-restarted producers, and the retired device
+    #: ids — all zero/empty on a fault-free run
+    retries: int = 0
+    failovers: int = 0
+    watchdog_fires: int = 0
+    retired_devices: list = field(default_factory=list)
+    #: windows restored from a checkpoint journal instead of re-executed
+    resumed_windows: int = 0
 
     @property
     def shard_max_over_mean(self) -> float:
@@ -517,6 +545,13 @@ class EngineStats:
                          f"(cap {self.dispatch_batch_limit})")
             else:
                 part += f" idle_steps={self.idle_steps}"
+        if (self.retries or self.failovers or self.watchdog_fires
+                or self.resumed_windows):
+            part += (f" faults[retries={self.retries} "
+                     f"failovers={self.failovers} "
+                     f"retired={self.retired_devices} "
+                     f"watchdog_fires={self.watchdog_fires} "
+                     f"resumed={self.resumed_windows}]")
         return (f"{self.backend} [{mode} emit={self.emit}] "
                 f"chunks={self.chunks} items={self.items} "
                 f"peak_plan_bytes={self.peak_plan_bytes} "
@@ -524,6 +559,104 @@ class EngineStats:
                 f"plan_upload_bytes={self.plan_upload_bytes} "
                 f"chunk_max_over_mean={self.chunk_max_over_mean:.3f} "
                 f"step_compiles={self.step_compiles}" + part)
+
+
+class _CheckpointJournal:
+    """JSONL window journal for :meth:`CensusEngine.run(checkpoint=)`.
+
+    Line 0 is the run fingerprint (graph + schedule identity); every
+    further line records one landed dispatch: the shard, the explicit
+    window ids it covered, the dispatch's summed int64 partials, and
+    the per-window valid item counts.  Landings are flushed
+    line-by-line, so a run killed mid-stream leaves a valid prefix.
+
+    Resume correctness rests on the property the async machinery already
+    proved: the host merge is an integer sum over independent windows,
+    so restoring the journaled partials and *skipping exactly the
+    journaled window ids* reproduces the uninterrupted census
+    bit-identically — regardless of the order landings happened to
+    reach the journal (retried windows can land out of per-shard
+    order, hence explicit ids instead of prefix counts).
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str, fingerprint: dict, ndev: int):
+        self.path = path
+        self.fingerprint = fingerprint
+        #: per-shard set of yielded-window ids already landed
+        self.done: list = [set() for _ in range(ndev)]
+        self.hist = np.zeros(64, np.int64)
+        self.inter = np.zeros(2, np.int64)
+        self.chunk_items: list = []
+        self.shard_items = [0] * ndev
+        self.windows = 0
+        self._f = None
+        if os.path.exists(path):
+            self._load(ndev)
+        self._f = open(path, "a" if self.windows or self._header_ok
+                       else "w")
+        if not self._header_ok:
+            self._f.write(json.dumps({"v": self.VERSION,
+                                      **fingerprint}) + "\n")
+            self._f.flush()
+
+    _header_ok = False
+
+    @staticmethod
+    def graph_fingerprint(space, *, emit: str, ndev: int,
+                          max_items) -> dict:
+        return {
+            "n": int(space.n), "pairs": int(space.num_pairs),
+            "preprune": int(space.num_items_preprune),
+            "packed_crc": int(zlib.crc32(
+                np.ascontiguousarray(space.packed).tobytes())),
+            "orient": space.orient, "prune_self": bool(space.prune_self),
+            "emit": emit, "ndev": int(ndev),
+            "max_items": None if max_items is None else int(max_items),
+        }
+
+    def _load(self, ndev: int) -> None:
+        with open(self.path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+        if not lines:
+            return
+        head = json.loads(lines[0])
+        want = {"v": self.VERSION, **self.fingerprint}
+        if head != want:
+            raise FaultError(
+                f"checkpoint {self.path!r} was written by a different "
+                f"run (header {head} != {want}); delete it or pass a "
+                f"fresh path")
+        self._header_ok = True
+        for ln in lines[1:]:
+            try:
+                rec = json.loads(ln)
+            except json.JSONDecodeError:
+                break                      # torn final line from a kill
+            s = int(rec["s"])
+            ids = {int(x) for x in rec["ids"]}
+            if ids & self.done[s]:
+                continue                   # duplicate landing — ignore
+            self.done[s] |= ids
+            self.hist += np.asarray(rec["hist"], dtype=np.int64)
+            self.inter += np.asarray(rec["inter"], dtype=np.int64)
+            self.chunk_items.extend(int(x) for x in rec["items"])
+            self.shard_items[s] += int(sum(rec["items"]))
+            self.windows += len(ids)
+
+    def record(self, s: int, ids, hist, inter, items) -> None:
+        self._f.write(json.dumps({
+            "s": int(s), "ids": [int(x) for x in ids],
+            "hist": [int(x) for x in hist],
+            "inter": [int(x) for x in inter],
+            "items": [int(x) for x in items]}) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
 
 
 class CensusEngine:
@@ -550,7 +683,10 @@ class CensusEngine:
                  pipeline_depth: int = PIPELINE_DEPTH,
                  max_windows_per_dispatch: int =
                  MAX_WINDOWS_PER_DISPATCH,
-                 partition_2d: tuple | None = None):
+                 partition_2d: tuple | None = None,
+                 max_retries: int = 2, retry_backoff: float = 0.01,
+                 watchdog_timeout: float | None = None,
+                 faults: FaultPlan | None = None):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; one of {BACKENDS}")
@@ -587,6 +723,15 @@ class CensusEngine:
             raise ValueError(
                 "max_windows_per_dispatch must be >= 1, got "
                 f"{max_windows_per_dispatch}")
+        if max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff < 0:
+            raise ValueError(
+                f"retry_backoff must be >= 0, got {retry_backoff}")
+        if watchdog_timeout is not None and watchdog_timeout <= 0:
+            raise ValueError(
+                f"watchdog_timeout must be > 0, got {watchdog_timeout}")
         self.mesh = mesh
         self.backend = backend
         self.emit = emit
@@ -600,6 +745,15 @@ class CensusEngine:
         self.pipeline_depth = int(pipeline_depth)
         #: cap K on the windows one async megastep dispatch may consume
         self.max_windows_per_dispatch = int(max_windows_per_dispatch)
+        #: fault-tolerance knobs: per-window re-dispatch budget with
+        #: exponential ``retry_backoff`` sleeps, producer-stall watchdog
+        #: (None == off), and an optional deterministic
+        #: :class:`repro.core.faults.FaultPlan` to inject against
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.watchdog_timeout = (None if watchdog_timeout is None
+                                 else float(watchdog_timeout))
+        self.faults = faults
         self.stats: EngineStats | None = None
 
     @property
@@ -674,7 +828,8 @@ class CensusEngine:
     def run(self, g: CompactDigraph, *, max_items: int | None = None,
             orient: str = "none", prune_self: bool = True,
             progress=None, emit: str | None = None,
-            schedule: str | None = None, part=None) -> np.ndarray:
+            schedule: str | None = None, part=None,
+            checkpoint: str | None = None) -> np.ndarray:
         """Plan + count ``g`` end to end.
 
         ``max_items=None`` covers the whole item space in one dispatch;
@@ -694,6 +849,12 @@ class CensusEngine:
         ``part`` — a prebuilt :class:`repro.core.partition.GraphPartition`
         over ``num_shards == ndev`` shards, overriding the internal LPT
         (``orient``/``prune_self`` are then taken from its space).
+
+        ``checkpoint`` (partitioned async runs only) journals every
+        landed window to the given JSONL path; a later ``run`` (or
+        :meth:`resume`) against an existing journal restores the
+        journaled partials, skips the completed windows, and reproduces
+        the uninterrupted census bit-identically.
         """
         emit = self.emit if emit is None else emit
         if emit not in EMIT_MODES:
@@ -706,12 +867,18 @@ class CensusEngine:
         if part is not None and not self.partition:
             raise ValueError(
                 "a prebuilt partition requires partition=True")
+        if checkpoint is not None and not (
+                self.partition and schedule == "async"):
+            raise ValueError(
+                "checkpoint/resume is supported on partitioned async "
+                "runs (partition=True, schedule='async')")
         if self.partition:
             return self._run_partitioned(g, max_items=max_items,
                                          orient=orient,
                                          prune_self=prune_self,
                                          progress=progress, emit=emit,
-                                         schedule=schedule, part=part)
+                                         schedule=schedule, part=part,
+                                         checkpoint=checkpoint)
         if emit == "device":
             chunker = PlanChunker(g, max_items, orient=orient,
                                   pad_to=self.ndev, prune_self=prune_self)
@@ -724,6 +891,18 @@ class CensusEngine:
         chunker = PlanChunker(g, max_items, orient=orient,
                               pad_to=self.ndev, prune_self=prune_self)
         return self._run_stream(chunker, progress)
+
+    def resume(self, g: CompactDigraph, checkpoint: str,
+               **kwargs) -> np.ndarray:
+        """Resume a checkpointed partitioned async run: requires the
+        journal to exist (use :meth:`run` with ``checkpoint=`` to start
+        one), restores its landed windows, and completes the rest —
+        bit-identical to the uninterrupted run."""
+        if not os.path.exists(checkpoint):
+            raise FileNotFoundError(
+                f"no checkpoint journal at {checkpoint!r}; start the "
+                f"run with run(..., checkpoint=path) first")
+        return self.run(g, checkpoint=checkpoint, **kwargs)
 
     def session(self, g: CompactDigraph, *, orient: str = "none",
                 prune_self: bool = True, max_items: int | None = None,
@@ -897,7 +1076,8 @@ class CensusEngine:
     def _run_partitioned(self, g: CompactDigraph, *,
                          max_items: int | None, orient: str,
                          prune_self: bool, progress, emit: str,
-                         schedule: str, part=None) -> np.ndarray:
+                         schedule: str, part=None,
+                         checkpoint: str | None = None) -> np.ndarray:
         """Partitioned plan + count: LPT-shard the pair space (or take a
         prebuilt ``part``), extract one local subgraph per mesh device,
         and walk every device's private chunk queue
@@ -939,7 +1119,8 @@ class CensusEngine:
                   else ITEM_BYTES * sched.chunk_shape)
         if schedule == "async":
             return self._run_partitioned_async(part, sched, progress,
-                                               emit, max_items, upload)
+                                               emit, max_items, upload,
+                                               checkpoint=checkpoint)
         self.stats = EngineStats(
             backend=self.backend, ndev=self.ndev, orient=space.orient,
             streamed=max_items is not None, max_items=max_items,
@@ -1039,7 +1220,9 @@ class CensusEngine:
     def _run_partitioned_async(self, part, sched: ShardSchedule,
                                progress, emit: str,
                                max_items: int | None,
-                               upload: int) -> np.ndarray:
+                               upload: int,
+                               checkpoint: str | None = None
+                               ) -> np.ndarray:
         """Async per-shard streams: every device drains its PRIVATE chunk
         queue with no inter-shard barrier.
 
@@ -1082,6 +1265,22 @@ class CensusEngine:
 
         Partials merge on the host in int64 — integer sums, so the
         arbitrary landing order is bit-identical to the lock-step psum.
+
+        **Fault tolerance** rides on the same property: windows are
+        independent and the merge is order-invariant, so any window can
+        be re-dispatched (after a transient error or a corrupted
+        result) or re-routed to a surviving device (after its home
+        device is retired) without changing a single census bit.  Every
+        dispatch is retried up to ``max_retries`` with exponential
+        backoff; a device that exhausts the budget (or hits a
+        persistent injected fault) is retired and its shards' host
+        arrays are re-uploaded to a survivor, whose already-compiled
+        step drains the remaining queue; stalled producers are
+        restarted by the pipeline watchdog; and ``checkpoint=`` journals
+        every landed window so a killed run resumes to the exact same
+        census.  An optional :class:`repro.core.faults.FaultPlan`
+        injects deterministic failures at the producer / upload /
+        dispatch boundaries to exercise all of it.
         """
         space = part.space
         ndev = self.ndev
@@ -1116,16 +1315,29 @@ class CensusEngine:
                                    np.zeros(64, np.int64),
                                    np.zeros(2, np.int64))
 
+        injector = (self.faults.injector()
+                    if self.faults is not None else None)
+        journal = None
+        done = None
+        if checkpoint is not None:
+            fp = _CheckpointJournal.graph_fingerprint(
+                space, emit=emit, ndev=ndev, max_items=max_items)
+            journal = _CheckpointJournal(checkpoint, fp, ndev)
+            done = journal.done
+
         devices = list(self.mesh.devices.flat)
         # per-device commit of each shard's padded local arrays (common
         # shapes across shards, so ONE compiled single-device step serves
-        # every shard's every window)
+        # every shard's every window); the host copies in ``arrs`` stay
+        # alive as the failover re-upload source
         arrs = stacked_device_arrays(part.shards)
         dev = [tuple(jax.device_put(a[s], devices[s]) for a in arrs)
                for s in range(ndev)]
+        #: shard → device currently serving it (failover re-routes)
+        home = list(range(ndev))
+        retired: set = set()
         # drained-shard short-circuit: a shard with zero windows never
         # gets a producer thread or a consumer rotation slot
-        live = [s for s in range(ndev) if sched.steps_for(s) > 0]
         batcher = None
         if emit == "device":
             step = _desc_megastep(self.mesh)
@@ -1134,102 +1346,242 @@ class CensusEngine:
                 for d in devices]
             batcher = WindowBatcher(
                 cap, 1 + 3 * sched.desc_shape + sched.num_anchors)
+            # remaining window ids per shard in yield order — lets the
+            # consumer recover each pulled window's id (FIFO queues
+            # preserve producer order) for the checkpoint journal
+            order = [[k for k in range(sched.steps_for(s))
+                      if done is None or k not in done[s]]
+                     for s in range(ndev)]
+            live = [s for s in range(ndev) if order[s]]
 
-            def source(s):
-                for k in range(sched.steps_for(s)):
-                    yield sched.descriptors(s, k).device_words()
+            def make_source(s, skip=0):
+                def gen():
+                    for j, k in enumerate(order[s]):
+                        if j < skip:
+                            continue
+                        if injector is not None:
+                            injector.fire("producer", shard=s)
+                        yield sched.descriptors(s, k).device_words()
+                return gen()
         else:
             step = _chunk_step(self.mesh)
+            order = None
+            live = [s for s in range(ndev) if sched.steps_for(s) > 0]
 
-            def source(s):
-                for k in range(sched.steps_for(s)):
-                    sp, pv, num = sched.shard_step_items(s, k)
-                    if num == 0:
-                        # fully-pruned window: zero contribution by
-                        # construction — never dispatched
-                        continue
-                    yield sp, pv, num
+            def make_source(s, skip=0):
+                def gen():
+                    emitted = 0
+                    for k in range(sched.steps_for(s)):
+                        if done is not None and k in done[s]:
+                            continue
+                        sp, pv, num = sched.shard_step_items(s, k)
+                        if num == 0:
+                            # fully-pruned window: zero contribution by
+                            # construction — never dispatched
+                            continue
+                        emitted += 1
+                        if emitted <= skip:
+                            continue
+                        if injector is not None:
+                            injector.fire("producer", shard=s)
+                        yield k, sp, pv, num
+                return gen()
 
         cache0 = _jit_cache_size(step)
         hist_acc = np.zeros(64, np.int64)
         inter_acc = np.zeros(2, np.int64)
         chunk_items: list[int] = []
+        if journal is not None and journal.windows:
+            np.add(hist_acc, journal.hist, out=hist_acc)
+            np.add(inter_acc, journal.inter, out=inter_acc)
+            chunk_items.extend(journal.chunk_items)
+            self.stats.resumed_windows = journal.windows
         shard_steps = [0] * ndev
+        pos = [0] * ndev
         dispatches = 0
         win_max = 0
         pad_windows = 0
-        landed = [0]
+        landed = [self.stats.resumed_windows]
+        st = self.stats
+
+        def retire(d_id: int, cause) -> None:
+            """Fail device ``d_id`` over to the survivors: every shard
+            homed on it is re-uploaded (from the host copies) onto a
+            surviving device, whose already-compiled step drains the
+            rest of the queue.  The merge is untouched, so the census
+            stays bit-identical."""
+            if d_id in retired:
+                return
+            retired.add(d_id)
+            survivors = [x for x in range(ndev) if x not in retired]
+            if not survivors:
+                raise FaultError(
+                    "every device has been retired; cannot complete "
+                    "the census") from cause
+            st.failovers += 1
+            st.retired_devices.append(d_id)
+            for s2 in range(ndev):
+                if home[s2] == d_id:
+                    r = survivors[s2 % len(survivors)]
+                    home[s2] = r
+                    dev[s2] = tuple(
+                        jax.device_put(a[s2], devices[r]) for a in arrs)
+
+        def do_dispatch(s: int, window):
+            """One dispatch attempt of ``window`` on shard ``s``'s home
+            device; returns (future, poisoned)."""
+            d_id = home[s]
+            d = devices[d_id]
+            if injector is not None:
+                injector.fire("upload", shard=s, device=d_id)
+            if emit == "device":
+                buf, _x = window
+                buf_d = jax.device_put(buf, d)
+                if injector is not None:
+                    injector.fire("dispatch", shard=s, device=d_id)
+                fut = step(*dev[s], buf_d, idx[d_id],
+                           space.search_iters, sched.desc_iters,
+                           self.backend, space.orient, space.prune_self)
+            else:
+                _wid, sp, pv, _num = window
+                sp_d = jax.device_put(sp, d)
+                pv_d = jax.device_put(pv, d)
+                if injector is not None:
+                    injector.fire("dispatch", shard=s, device=d_id)
+                fut = step(*dev[s], sp_d, pv_d, None,
+                           space.search_iters, self.backend)
+            poisoned = (injector.take_poison()
+                        if injector is not None else False)
+            return fut, poisoned
+
+        def dispatch_retrying(s: int, window, attempts: int = 0):
+            """Dispatch with the retry/failover discipline: transient
+            failures back off and retry on the same device up to
+            ``max_retries``; a dead device (persistent fault) or an
+            exhausted budget retires the device and re-routes."""
+            while True:
+                d_id = home[s]
+                try:
+                    fut, poisoned = do_dispatch(s, window)
+                    return fut, poisoned, attempts
+                except Exception as exc:
+                    dead = ((injector is not None
+                             and injector.device_is_dead(d_id))
+                            or getattr(getattr(exc, "fault", None),
+                                       "persistent", False))
+                    if dead:
+                        retire(d_id, exc)
+                        attempts = 0
+                        continue
+                    attempts += 1
+                    st.retries += 1
+                    if attempts > self.max_retries:
+                        # budget exhausted: treat the device as failed
+                        # and drain its queue on the survivors
+                        retire(d_id, exc)
+                        attempts = 0
+                        continue
+                    time.sleep(self.retry_backoff
+                               * 2 ** (attempts - 1))
 
         def land(job) -> None:
-            s, fut, x = job
-            if emit == "device":
-                # megastep: per-window int32 partials stacked (cap, ·);
-                # summing the first x rows through int64 is bit-identical
-                # to landing x single-window dispatches
-                hist64s = np.asarray(fut[0], dtype=np.int64)
-                inter3s = np.asarray(fut[1], dtype=np.int64)
-                np.add(hist_acc, hist64s[:x].sum(axis=0), out=hist_acc)
-                np.add(inter_acc, inter3s[:x, :2].sum(axis=0),
-                       out=inter_acc)
-                for i in range(x):
-                    num = int(inter3s[i, 2])
-                    chunk_items.append(num)
-                    if progress is not None:
-                        progress(landed[0], total_windows, num)
-                    landed[0] += 1
-            else:
-                np.add(hist_acc, np.asarray(fut[0], dtype=np.int64),
-                       out=hist_acc)
-                np.add(inter_acc, np.asarray(fut[1], dtype=np.int64),
-                       out=inter_acc)
-                chunk_items.append(x)
+            s, window, ids, fut, x, attempts, poisoned = job
+            while True:
+                try:
+                    if emit == "device":
+                        # megastep: per-window int32 partials stacked
+                        # (cap, ·); summing the first x rows through
+                        # int64 is bit-identical to landing x
+                        # single-window dispatches
+                        hist64s = np.asarray(fut[0], dtype=np.int64)
+                        inter3s = np.asarray(fut[1], dtype=np.int64)
+                        if poisoned:
+                            hist64s, inter3s = poison_result(hist64s,
+                                                             inter3s)
+                        _validate_partials(hist64s[:x], inter3s[:x])
+                        hsum = hist64s[:x].sum(axis=0)
+                        isum = inter3s[:x, :2].sum(axis=0)
+                        nums = [int(inter3s[i, 2]) for i in range(x)]
+                    else:
+                        h = np.asarray(fut[0], dtype=np.int64)
+                        it2 = np.asarray(fut[1], dtype=np.int64)
+                        if poisoned:
+                            h, it2 = poison_result(h, it2)
+                        _validate_partials(h, it2)
+                        hsum, isum = h, it2
+                        nums = [x]
+                    break
+                except Exception as exc:
+                    # fetch/validation failure: re-dispatch the SAME
+                    # window (same-device retry, then failover) — the
+                    # merge is order-invariant, so the late landing is
+                    # bit-identical
+                    attempts += 1
+                    st.retries += 1
+                    if attempts > self.max_retries:
+                        retire(home[s], exc)
+                        attempts = 0
+                    else:
+                        time.sleep(self.retry_backoff
+                                   * 2 ** (attempts - 1))
+                    fut, poisoned, attempts = dispatch_retrying(
+                        s, window, attempts)
+            np.add(hist_acc, hsum, out=hist_acc)
+            np.add(inter_acc, isum, out=inter_acc)
+            if journal is not None:
+                journal.record(s, ids, hsum, isum, nums)
+            for num in nums:
+                chunk_items.append(num)
                 if progress is not None:
-                    progress(landed[0], total_windows, x)
+                    progress(landed[0], total_windows, num)
                 landed[0] += 1
 
+        def restart(slot: int, skip: int):
+            return make_source(live[slot], skip)
+
         pipeline = ShardStreamPipeline(
-            [source(s) for s in live], depth=self.pipeline_depth,
-            batch=batcher)
+            [make_source(s) for s in live], depth=self.pipeline_depth,
+            batch=batcher, restart=restart,
+            watchdog=self.watchdog_timeout,
+            max_retries=self.max_retries, backoff=self.retry_backoff)
         pending: deque = deque()
         limit = 2 * ndev
         try:
-            for slot, window in pipeline:
-                s = live[slot]
-                d = devices[s]
-                if emit == "device":
-                    buf, k = window
-                    fut = step(*dev[s], jax.device_put(buf, d),
-                               idx[s], space.search_iters,
-                               sched.desc_iters, self.backend,
-                               space.orient, space.prune_self)
-                    job = (s, fut, k)
-                    shard_steps[s] += k
-                    win_max = max(win_max, k)
-                    pad_windows += cap - k
-                else:
-                    sp, pv, num = window
-                    fut = step(*dev[s], jax.device_put(sp, d),
-                               jax.device_put(pv, d), None,
-                               space.search_iters, self.backend)
-                    job = (s, fut, num)
-                    shard_steps[s] += 1
-                    win_max = max(win_max, 1)
-                dispatches += 1
-                pending.append(job)
-                if len(pending) > limit:
+            with pipeline:
+                for slot, window in pipeline:
+                    s = live[slot]
+                    if emit == "device":
+                        _buf, x = window
+                        ids = order[s][pos[s]:pos[s] + x]
+                        pos[s] += x
+                        shard_steps[s] += x
+                        win_max = max(win_max, x)
+                        pad_windows += cap - x
+                    else:
+                        wid, _sp, _pv, x = window
+                        ids = [wid]
+                        shard_steps[s] += 1
+                        win_max = max(win_max, 1)
+                    fut, poisoned, attempts = dispatch_retrying(s, window)
+                    dispatches += 1
+                    pending.append(
+                        (s, window, ids, fut, x, attempts, poisoned))
+                    if len(pending) > limit:
+                        land(pending.popleft())
+                while pending:
                     land(pending.popleft())
-            while pending:
-                land(pending.popleft())
         finally:
-            pipeline.close()
+            if journal is not None:
+                journal.close()
 
-        st = self.stats
         st.step_compiles = _jit_cache_size(step) - cache0
         st.chunk_items = chunk_items
         st.chunks = len(chunk_items)
         st.items = int(sum(chunk_items))
         st.shard_steps = shard_steps
         st.stall_steps = pipeline.stalls
+        st.retries += pipeline.producer_retries
+        st.watchdog_fires = pipeline.watchdog_fires
         st.dispatches_total = dispatches
         st.windows_per_dispatch_max = win_max
         st.windows_per_dispatch_mean = (
@@ -1258,6 +1610,93 @@ def _split_capacity_compiles(session, chunk_items: list, compiles: int
         session._capacity_grew = False
         return compiles, 0
     return 0, compiles
+
+
+def _dispatch_retrying_session(session, thunk):
+    """Session-side dispatch retry: call ``thunk`` (upload + step launch,
+    with the session's fault-injection hooks inside) under the engine's
+    retry budget with exponential backoff.  Sessions retry on the same
+    device only — failover is an engine-run discipline — so a persistent
+    fault surfaces to the caller once the budget is spent (the temporal
+    monitor turns that into a degraded window instead of dying)."""
+    engine = session.engine
+    attempts = 0
+    while True:
+        try:
+            return thunk()
+        except FaultError:
+            if attempts >= engine.max_retries:
+                raise
+            attempts += 1
+            session.retries += 1
+            time.sleep(engine.retry_backoff * 2 ** (attempts - 1))
+
+
+def _land_retrying_session(session, fut, poisoned, redo):
+    """Session-side landing: fetch + validate one dispatch result,
+    re-dispatching the same window via ``redo`` on failure (fetch error
+    or corrupted partials), up to the engine's retry budget.  Returns
+    the validated ``(hist64, inter)`` int64 arrays — the caller
+    accumulates them, so nothing is ever double-counted."""
+    engine = session.engine
+    attempts = 0
+    while True:
+        try:
+            hist = np.asarray(fut[0], dtype=np.int64)
+            inter = np.asarray(fut[1], dtype=np.int64)
+            if poisoned:
+                hist, inter = poison_result(hist, inter)
+            _validate_partials(hist, inter)
+            return hist, inter
+        except Exception:
+            if redo is None or attempts >= engine.max_retries:
+                raise
+            attempts += 1
+            session.retries += 1
+            time.sleep(engine.retry_backoff * 2 ** (attempts - 1))
+            fut, poisoned = redo()
+
+
+def _session_graph_crc(g: CompactDigraph) -> int:
+    return int(zlib.crc32(np.ascontiguousarray(g.packed).tobytes()))
+
+
+def _save_session_checkpoint(session, path: str) -> None:
+    """Persist a session's running census + graph fingerprint so a new
+    session over the same graph can continue warm updates without
+    recomputing the baseline (both session kinds share this format)."""
+    if session._census is None:
+        raise RuntimeError(
+            "no census to checkpoint: call census() first")
+    with open(path, "w") as f:
+        json.dump({
+            "v": 1, "kind": "session", "n": int(session.n),
+            "orient": session.orient,
+            "prune_self": bool(session.prune_self),
+            "packed_crc": _session_graph_crc(session._g),
+            "census": [int(x) for x in session._census]}, f)
+        f.write("\n")
+
+
+def _load_session_checkpoint(session, path: str) -> np.ndarray:
+    """Restore a running census saved by :func:`_save_session_checkpoint`
+    into a session whose RESIDENT graph matches the checkpoint's
+    fingerprint; :meth:`update` then continues exactly where the saved
+    session left off (bit-identical — the census never depended on which
+    process computed it)."""
+    with open(path) as f:
+        rec = json.load(f)
+    want = {"v": 1, "kind": "session", "n": int(session.n),
+            "orient": session.orient,
+            "prune_self": bool(session.prune_self),
+            "packed_crc": _session_graph_crc(session._g)}
+    got = {k: rec.get(k) for k in want}
+    if got != want:
+        raise FaultError(
+            f"session checkpoint {path!r} does not match the resident "
+            f"graph/session ({got} != {want})")
+    session._census = np.asarray(rec["census"], dtype=np.int64)
+    return session._census.copy()
 
 
 class EngineSession:
@@ -1332,9 +1771,49 @@ class EngineSession:
         self._census: np.ndarray | None = None
         self.last_delta: GraphDelta | None = None
         self.stats: EngineStats | None = None
+        #: injected-fault runtime shared across this session's dispatches
+        #: (occurrence counters persist across census()/update() calls)
+        self._injector = (engine.faults.injector()
+                          if engine.faults is not None else None)
+        #: dispatches re-attempted after a fault, across the session's life
+        self.retries = 0
+        self._closed = False
         self._install(g)
         if self.emit == "device":
             self._init_device_emission()
+
+    # ---------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release the resident device buffers.  Idempotent; the session
+        is unusable afterwards."""
+        self._dev = None
+        if hasattr(self, "_idx"):
+            self._idx = None
+        self._closed = True
+
+    def __enter__(self) -> "EngineSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("session is closed")
+
+    # ------------------------------------------------------- checkpointing
+    def save_checkpoint(self, path: str) -> None:
+        """Persist the running census + graph fingerprint (JSON) so a new
+        session over the same graph resumes warm updates via
+        :meth:`load_checkpoint` without recomputing the baseline."""
+        _save_session_checkpoint(self, path)
+
+    def load_checkpoint(self, path: str) -> np.ndarray:
+        """Adopt a census saved by :meth:`save_checkpoint`; the resident
+        graph must match the checkpoint's fingerprint.  Returns the
+        restored census; subsequent :meth:`update` calls continue
+        bit-identically from it."""
+        return _load_session_checkpoint(self, path)
 
     # ------------------------------------------------------------ state
     @property
@@ -1427,24 +1906,43 @@ class EngineSession:
         inter_acc = np.zeros(2, np.int64)
         chunk_items: list[int] = []
         pending = None
+
+        def land(job):
+            fut, poisoned, dispatch = job
+            hist, inter = _land_retrying_session(
+                self, fut, poisoned,
+                lambda: _dispatch_retrying_session(self, dispatch))
+            np.add(hist_acc, hist, out=hist_acc)
+            np.add(inter_acc, inter, out=inter_acc)
+
         for item_pair, item_slot, item_side in batches:
             num = int(item_pair.shape[0])
             if num == 0:
                 continue
             item_sp, item_pv = pad_and_pack(
                 item_pair, item_slot, item_side, self.chunk_shape)
-            sp_dev = self.engine._put(item_sp, self._item_sh)
-            pv_dev = self.engine._put(item_pv, self._item_sh)
-            fut = self._step(*self._dev, sp_dev, pv_dev, self.engine.mesh,
-                             self.search_iters, self.engine.backend)
+
+            def dispatch(item_sp=item_sp, item_pv=item_pv):
+                inj = self._injector
+                if inj is not None:
+                    inj.fire("upload", shard=0, device=0)
+                sp_dev = self.engine._put(item_sp, self._item_sh)
+                pv_dev = self.engine._put(item_pv, self._item_sh)
+                if inj is not None:
+                    inj.fire("dispatch", shard=0, device=0)
+                fut = self._step(*self._dev, sp_dev, pv_dev,
+                                 self.engine.mesh, self.search_iters,
+                                 self.engine.backend)
+                poisoned = inj.take_poison() if inj is not None else False
+                return fut, poisoned
+
+            fut, poisoned = _dispatch_retrying_session(self, dispatch)
             if pending is not None:
-                hist_acc += np.asarray(pending[0], dtype=np.int64)
-                inter_acc += np.asarray(pending[1], dtype=np.int64)
-            pending = fut
+                land(pending)
+            pending = (fut, poisoned, dispatch)
             chunk_items.append(num)
         if pending is not None:
-            hist_acc += np.asarray(pending[0], dtype=np.int64)
-            inter_acc += np.asarray(pending[1], dtype=np.int64)
+            land(pending)
         return hist_acc, inter_acc, chunk_items
 
     def _run_desc_batches(self, windows
@@ -1460,21 +1958,40 @@ class EngineSession:
         chunk_items: list[int] = []
         put = self.engine._put
         pending = None
+
+        def land(job):
+            fut, poisoned, dispatch = job
+            hist, inter3 = _land_retrying_session(
+                self, fut, poisoned,
+                lambda: _dispatch_retrying_session(self, dispatch))
+            np.add(hist_acc, hist, out=hist_acc)
+            np.add(inter_acc, inter3[:2], out=inter_acc)
+            chunk_items.append(int(inter3[2]))
+
         for win in windows:
             if win.num_preprune == 0:
                 continue
-            words = put(win.device_words(), self._rep)
-            fut = _desc_step(*self._dev, words, self._idx,
-                             self.engine.mesh, self.search_iters,
-                             self.desc_iters, self.engine.backend,
-                             self.orient, self.prune_self)
+
+            def dispatch(win=win):
+                inj = self._injector
+                if inj is not None:
+                    inj.fire("upload", shard=0, device=0)
+                words = put(win.device_words(), self._rep)
+                if inj is not None:
+                    inj.fire("dispatch", shard=0, device=0)
+                fut = _desc_step(*self._dev, words, self._idx,
+                                 self.engine.mesh, self.search_iters,
+                                 self.desc_iters, self.engine.backend,
+                                 self.orient, self.prune_self)
+                poisoned = inj.take_poison() if inj is not None else False
+                return fut, poisoned
+
+            fut, poisoned = _dispatch_retrying_session(self, dispatch)
             if pending is not None:
-                _land_desc_partials(pending, hist_acc, inter_acc,
-                                    chunk_items)
-            pending = fut
+                land(pending)
+            pending = (fut, poisoned, dispatch)
         if pending is not None:
-            _land_desc_partials(pending, hist_acc, inter_acc,
-                                chunk_items)
+            land(pending)
         return hist_acc, inter_acc, chunk_items
 
     def _slices(self, item_pair, item_slot, item_side):
@@ -1550,6 +2067,7 @@ class EngineSession:
                 if self.emit == "device"
                 else ITEM_BYTES * self.chunk_shape // ndev),
             capacity_recompiles=capacity_recompiles,
+            retries=self.retries,
             graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
         self.engine.stats = self.stats
 
@@ -1560,6 +2078,7 @@ class EngineSession:
         (host plan memory O(chunk_shape), never O(W)); under device
         emission only descriptor windows are built — O(pairs-per-window)
         host memory and upload."""
+        self._check_open()
         space = self._space
         cache0 = self._cache_size()
         w0 = space.num_items_preprune
@@ -1588,6 +2107,7 @@ class EngineSession:
         """Apply an edge delta and return the edited graph's census,
         recounting only the affected pairs — bit-identical to a
         from-scratch census of the new graph on any backend."""
+        self._check_open()
         if self._census is None:
             raise RuntimeError(
                 "no baseline census: call census() before update()")
@@ -1691,7 +2211,47 @@ class PartitionedEngineSession:
         self._census: np.ndarray | None = None
         self.last_delta: GraphDelta | None = None
         self.stats: EngineStats | None = None
+        #: injected-fault runtime shared across this session's dispatches
+        self._injector = (engine.faults.injector()
+                          if engine.faults is not None else None)
+        #: dispatches re-attempted after a fault, across the session's life
+        self.retries = 0
+        self._closed = False
         self._install_full(g)
+
+    # ---------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release every shard's resident device buffers.  Idempotent;
+        the session is unusable afterwards."""
+        self._dev = [None] * self.ndev
+        if hasattr(self, "_idx"):
+            self._idx = None
+        self._closed = True
+
+    def __enter__(self) -> "PartitionedEngineSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("session is closed")
+
+    # ------------------------------------------------------- checkpointing
+    def save_checkpoint(self, path: str) -> None:
+        """Persist the running census + graph fingerprint (JSON); a new
+        session over the same graph warm-resumes updates via
+        :meth:`load_checkpoint` without recomputing the baseline.  The
+        census never depends on the partition, so the restoring session
+        may shard (1D/2D) however it likes."""
+        _save_session_checkpoint(self, path)
+
+    def load_checkpoint(self, path: str) -> np.ndarray:
+        """Adopt a census saved by :meth:`save_checkpoint` (the resident
+        graph must match its fingerprint); :meth:`update` continues
+        bit-identically from it."""
+        return _load_session_checkpoint(self, path)
 
     # ------------------------------------------------------------ state
     @property
@@ -1842,29 +2402,47 @@ class PartitionedEngineSession:
     # ---------------------------------------------------------- running
     def _dispatch_desc(self, s: int, win):
         """One descriptor window against shard ``s``'s resident arrays,
-        on shard ``s``'s device (single-device step, async)."""
+        on shard ``s``'s device (single-device step, async).  Fires the
+        session's fault-injection hooks around the upload and the step
+        launch; returns ``(fut, poisoned)``."""
+        inj = self._injector
+        if inj is not None:
+            inj.fire("upload", shard=s, device=s)
         words = jax.device_put(win.device_words(), self._devices[s])
-        return _desc_step(*self._dev[s], words, self._idx[s], None,
-                          self.search_iters, self.desc_iters,
-                          self.engine.backend, self.orient,
-                          self.prune_self)
+        if inj is not None:
+            inj.fire("dispatch", shard=s, device=s)
+        fut = _desc_step(*self._dev[s], words, self._idx[s], None,
+                         self.search_iters, self.desc_iters,
+                         self.engine.backend, self.orient,
+                         self.prune_self)
+        return fut, (inj.take_poison() if inj is not None else False)
 
     def _dispatch_items(self, s: int, item_pair, item_slot, item_side):
         """One packed-item window against shard ``s``'s resident arrays
-        (host emission), on shard ``s``'s device."""
+        (host emission), on shard ``s``'s device; returns
+        ``(fut, poisoned)`` like :meth:`_dispatch_desc`."""
         item_sp, item_pv = pad_and_pack(item_pair, item_slot, item_side,
                                         self.chunk_shape)
         dev = self._devices[s]
-        return self._step(*self._dev[s],
-                          jax.device_put(item_sp, dev),
-                          jax.device_put(item_pv, dev),
-                          None, self.search_iters, self.engine.backend)
+        inj = self._injector
+        if inj is not None:
+            inj.fire("upload", shard=s, device=s)
+        sp_dev = jax.device_put(item_sp, dev)
+        pv_dev = jax.device_put(item_pv, dev)
+        if inj is not None:
+            inj.fire("dispatch", shard=s, device=s)
+        fut = self._step(*self._dev[s], sp_dev, pv_dev,
+                         None, self.search_iters, self.engine.backend)
+        return fut, (inj.take_poison() if inj is not None else False)
 
     def _shard_jobs(self, s: int, pair_ids=None):
-        """Yield shard ``s``'s dispatch futures: its full stream
-        (``pair_ids=None``) or an arbitrary local pair subset.  Host
-        emission yields ``(fut, num_items)``; device emission
-        ``(fut, None)`` (counts come back from the device)."""
+        """Yield shard ``s``'s dispatch jobs: its full stream
+        (``pair_ids=None``) or an arbitrary local pair subset.  Each job
+        is ``(fut, poisoned, redo, num_or_None)`` — ``redo`` re-dispatches
+        the same window (the landing-side retry handle), ``num`` is the
+        item count under host emission and ``None`` under device emission
+        (counts come back from the device).  Dispatch-time faults are
+        retried here under the engine's budget."""
         sp = self._shards[s].space
         cs = self.chunk_shape
         if self.emit == "device":
@@ -1878,7 +2456,13 @@ class PartitionedEngineSession:
             for win in wins:
                 if win.num_preprune == 0:
                     continue
-                yield self._dispatch_desc(s, win), None
+
+                def redo(win=win, s=s):
+                    return _dispatch_retrying_session(
+                        self, lambda: self._dispatch_desc(s, win))
+
+                fut, poisoned = redo()
+                yield fut, poisoned, redo, None
             return
         if pair_ids is None:
             w0 = sp.num_items_preprune
@@ -1894,24 +2478,34 @@ class PartitionedEngineSession:
             num = int(batch[0].shape[0])
             if num == 0:
                 continue
-            yield self._dispatch_items(s, *batch), num
+
+            def redo(batch=batch, s=s):
+                return _dispatch_retrying_session(
+                    self, lambda: self._dispatch_items(s, *batch))
+
+            fut, poisoned = redo()
+            yield fut, poisoned, redo, num
 
     def _job_stream(self, s: int, pair_ids=None):
         """Shard ``s``'s jobs tagged with their shard id (a bound helper,
         so per-shard generators never share a loop variable)."""
-        for fut, num in self._shard_jobs(s, pair_ids):
-            yield s, fut, num
+        for fut, poisoned, redo, num in self._shard_jobs(s, pair_ids):
+            yield s, fut, poisoned, redo, num
 
     def _land(self, futs, hist_acc, inter_acc, chunk_items, shard_items):
-        """Accumulate ``(shard, fut, num_or_None)`` results."""
-        for s, fut, num in futs:
+        """Accumulate ``(shard, fut, poisoned, redo, num_or_None)``
+        results, re-dispatching through ``redo`` on fetch failures or
+        corrupted partials (the landing half of the session retry)."""
+        for s, fut, poisoned, redo, num in futs:
+            hist, inter = _land_retrying_session(self, fut, poisoned,
+                                                 redo)
             if num is None:
-                num = _land_desc_partials(fut, hist_acc, inter_acc,
-                                          chunk_items)
+                inter_acc += inter[:2]
+                num = int(inter[2])
             else:
-                hist_acc += np.asarray(fut[0], dtype=np.int64)
-                inter_acc += np.asarray(fut[1], dtype=np.int64)
-                chunk_items.append(num)
+                inter_acc += inter
+            hist_acc += hist
+            chunk_items.append(num)
             shard_items[s] += num
 
     def _drain(self, streams, hist_acc, inter_acc, chunk_items,
@@ -1970,6 +2564,7 @@ class PartitionedEngineSession:
                 if self.emit == "device"
                 else ITEM_BYTES * self.chunk_shape),
             capacity_recompiles=capacity_recompiles,
+            retries=self.retries,
             partitioned=True,
             partition_shape=getattr(self, "mesh_shape", None),
             shard_items=shard_items,
@@ -1982,6 +2577,7 @@ class PartitionedEngineSession:
         """Full census of the resident graph: every shard walks its own
         stream on its own device, partials merge on the host.  (Re)bases
         the running C_k that :meth:`update` moves forward."""
+        self._check_open()
         cache0 = self._cache_size()
         hist_acc = np.zeros(64, np.int64)
         inter_acc = np.zeros(2, np.int64)
@@ -2055,6 +2651,7 @@ class PartitionedEngineSession:
         on their still-resident arrays, new contribution after refresh);
         every other shard keeps its device buffers untouched and
         dispatches nothing.  Bit-identical to a from-scratch census."""
+        self._check_open()
         if self._census is None:
             raise RuntimeError(
                 "no baseline census: call census() before update()")

@@ -36,16 +36,23 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import Iterator
 
 import numpy as np
 
 from repro.core.digraph import CompactDigraph
+from repro.core.faults import FaultError
 from repro.core.planner import (
-    DESC_SEARCH_ITERS, DescriptorWindow, PairSpace, descriptor_window,
-    emit_items, max_pairs_per_window, num_desc_anchors, pad_and_pack,
-    pair_space)
+    DESC_SEARCH_ITERS, DescriptorWindow, PairSpace, PlanOverflowError,
+    descriptor_window, emit_items, max_pairs_per_window, num_desc_anchors,
+    pad_and_pack, pair_space)
+
+
+class ProducerStalledError(FaultError):
+    """A shard's window producer made no progress past the watchdog
+    timeout and exhausted its restart budget."""
 
 
 @dataclass(frozen=True)
@@ -105,9 +112,11 @@ class PlanChunker:
         span = min(self.max_items, max(w_pre, 1))
         self.chunk_shape = -(-span // self.pad_to) * self.pad_to
         if self.chunk_shape >= 2**31:
-            raise ValueError(
-                "chunk exceeds int32 item indexing; pass a smaller "
-                "max_items budget")
+            raise PlanOverflowError(
+                f"chunk_shape {self.chunk_shape} exceeds int32 item "
+                f"indexing and would silently wrap the per-window int32 "
+                f"accumulator lanes; pass a smaller max_items budget "
+                f"(< 2**31)")
         starts = np.arange(self.num_chunks, dtype=np.int64) * self.max_items
         self._starts = starts
         self._base_asym, self._base_mut = self.space.base_slices(starts)
@@ -224,9 +233,11 @@ class ShardSchedule:
         #: its own ``chunk_shape`` item window per step)
         self.chunk_shape = max(min(budget, max(w_max, 1)), 1)
         if self.chunk_shape >= 2**31:
-            raise ValueError(
-                "chunk exceeds int32 item indexing; pass a smaller "
-                "max_items budget")
+            raise PlanOverflowError(
+                f"per-device chunk_shape {self.chunk_shape} exceeds int32 "
+                f"item indexing and would silently wrap the per-window "
+                f"int32 accumulator lanes; pass a smaller max_items "
+                f"budget (< 2**31 per device)")
         self.num_steps = max(
             (-(-s.num_items_preprune // self.chunk_shape)
              for s in self.spaces), default=0)
@@ -417,28 +428,92 @@ class ShardStreamPipeline:
     something has been consumed, so startup latency is not mistaken for
     producer starvation) and producer backlog (a put finding its queue
     full) calls :meth:`WindowBatcher.grow`, once per blocked window.
+
+    **Fault tolerance** (all optional, all off by default):
+
+    * ``restart`` — a factory ``restart(slot, skip) -> source`` building
+      a fresh window source for ``slot`` that skips its first ``skip``
+      raw windows.  With it, a producer that *raises* retries in place:
+      the thread rebuilds its source from the number of windows already
+      landed on the queue (the authoritative progress record — windows
+      put are never regenerated, windows lost mid-generation always
+      are) and resumes, up to ``max_retries`` attempts with exponential
+      ``backoff``; the budget exhausted, the exception surfaces to the
+      consumer as before.  Regeneration is pure host numpy from the
+      same immutable pair space, so a restarted stream is bit-identical
+      to an uninterrupted one.
+    * ``watchdog`` — a stall timeout in seconds.  A monitor thread
+      watches every live producer; one whose queue is *empty* and whose
+      put-count has not advanced for ``watchdog`` seconds is declared
+      hung, its attempt is cancelled, and a fresh thread resumes from
+      the same put-count (``watchdog_fires`` counts these).  Cancelled
+      attempts can never land a late window: puts and cancellation are
+      serialized under one lock, and a cancelled attempt re-checks its
+      own cancel event under that lock before every put.
+
+    The pipeline is a context manager; ``__exit__`` calls
+    :meth:`close`, so producer threads are reaped on exceptions and
+    KeyboardInterrupt, not just on the engine's explicit ``finally``.
     """
 
-    def __init__(self, sources, depth: int = 2, batch=None):
+    _POLL = 0.05
+
+    def __init__(self, sources, depth: int = 2, batch=None, *,
+                 restart=None, watchdog: float | None = None,
+                 max_retries: int = 2, backoff: float = 0.01):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.depth = int(depth)
         self.batch = batch
         self.stalls = 0
+        self.producer_retries = 0
+        self.watchdog_fires = 0
         self._consumed = 0
         self._stop = threading.Event()
+        self._restart = restart
+        self._watchdog = watchdog
+        self._max_retries = int(max_retries)
+        self._backoff = float(backoff)
         sources = list(sources)
-        if batch is not None:
-            sources = [batch.wrap(src) for src in sources]
-        self._live = set(range(len(sources)))
-        self._queues = [queue.Queue(maxsize=self.depth)
-                        for _ in sources]
+        n = len(sources)
+        self._live = set(range(n))
+        self._queues = [queue.Queue(maxsize=self.depth) for _ in range(n)]
+        #: serializes producer puts against watchdog cancellation so a
+        #: cancelled attempt can never land a late (duplicate) window
+        self._lock = threading.Lock()
+        #: raw windows successfully landed per slot, across all attempts
+        self._puts = [0] * n
+        #: restart attempts consumed per slot (error + watchdog combined)
+        self._attempts = [0] * n
+        self._cancels: list = [threading.Event() for _ in range(n)]
         self._threads = []
-        for q, src in zip(self._queues, sources):
-            t = threading.Thread(target=self._produce, args=(q, src),
-                                 daemon=True)
+        for s, src in enumerate(sources):
+            self._spawn(s, src, self._cancels[s])
+        if watchdog is not None:
+            t = threading.Thread(target=self._watch, daemon=True)
             t.start()
             self._threads.append(t)
+
+    def __enter__(self) -> "ShardStreamPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def _spawn(self, slot: int, source, cancel) -> None:
+        if self.batch is not None:
+            source = self.batch.wrap(source)
+        t = threading.Thread(target=self._produce,
+                             args=(slot, self._queues[slot], source, cancel),
+                             daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _make_source(self, slot: int, skip: int):
+        src = self._restart(slot, skip)
+        return self.batch.wrap(src) if self.batch is not None else src
 
     def _offer(self, q: queue.Queue, item) -> bool:
         """Stop-aware put: lands ``item`` or gives up once :meth:`close`
@@ -446,33 +521,106 @@ class ShardStreamPipeline:
         full queue, so an unconditional put would strand the thread)."""
         while not self._stop.is_set():
             try:
-                q.put(item, timeout=0.05)
+                q.put(item, timeout=self._POLL)
                 return True
             except queue.Full:
                 continue
         return False
 
-    def _produce(self, q: queue.Queue, source) -> None:
-        try:
-            for window in source:
-                backlogged = False
-                while not self._stop.is_set():
-                    try:
-                        q.put(window, timeout=0.05)
-                        break
-                    except queue.Full:
-                        if not backlogged and self.batch is not None:
-                            # consumer behind: one grow signal per
-                            # blocked window, not per retry
-                            self.batch.grow()
-                            backlogged = True
-                        continue
-                if self._stop.is_set():
+    def _put_window(self, slot: int, q: queue.Queue, window,
+                    cancel) -> bool:
+        """Land one window under the put/cancel lock; ``False`` once this
+        attempt is stopped or cancelled (the window is then discarded —
+        its replacement attempt will regenerate it)."""
+        count = window[1] if self.batch is not None else 1
+        backlogged = False
+        while not (self._stop.is_set() or cancel.is_set()):
+            with self._lock:
+                if cancel.is_set():
+                    return False
+                try:
+                    q.put_nowait(window)
+                    self._puts[slot] += count
+                    return True
+                except queue.Full:
+                    pass
+            if not backlogged and self.batch is not None:
+                # consumer behind: one grow signal per blocked window,
+                # not per retry
+                self.batch.grow()
+                backlogged = True
+            time.sleep(0.002)
+        return False
+
+    def _produce(self, slot: int, q: queue.Queue, source, cancel) -> None:
+        while True:
+            try:
+                for window in source:
+                    if not self._put_window(slot, q, window, cancel):
+                        return
+            except BaseException as exc:
+                if (self._restart is None or self._stop.is_set()
+                        or cancel.is_set()
+                        or self._attempts[slot] >= self._max_retries):
+                    # out of budget (or no restart factory): surface to
+                    # the consumer, as before
+                    self._offer(q, exc)
                     return
-        except BaseException as exc:     # surfaced to the consumer
-            self._offer(q, exc)
-            return
+                self._attempts[slot] += 1
+                self.producer_retries += 1
+                time.sleep(self._backoff * 2 ** (self._attempts[slot] - 1))
+                source = self._make_source(slot, self._puts[slot])
+                continue
+            break
         self._offer(q, _STREAM_DONE)
+
+    def _watch(self) -> None:
+        """Watchdog: restart producers whose queue is empty and whose
+        put-count is frozen past the timeout.  An empty queue rules out
+        a producer blocked on a legitimately full queue (that is
+        consumer-bound, not a stall), so a frozen count really means the
+        generation itself is hung."""
+        n = len(self._queues)
+        seen = list(self._puts)
+        since = [time.monotonic()] * n
+        poll = min(self._watchdog / 4.0, self._POLL) or self._POLL
+        while not self._stop.wait(poll):
+            now = time.monotonic()
+            for s in list(self._live):
+                fresh = None
+                with self._lock:
+                    if self._puts[s] != seen[s] or not self._queues[s].empty():
+                        seen[s] = self._puts[s]
+                        since[s] = now
+                        continue
+                    if now - since[s] < self._watchdog:
+                        continue
+                    # hung: cancel this attempt under the lock (no put
+                    # can interleave) and snapshot the resume point
+                    self._cancels[s].set()
+                    skip = self._puts[s]
+                    since[s] = now
+                    self.watchdog_fires += 1
+                    if (self._restart is None
+                            or self._attempts[s] >= self._max_retries):
+                        fresh = False
+                    else:
+                        self._attempts[s] += 1
+                        fresh = True
+                if fresh is False:
+                    self._offer(self._queues[s], ProducerStalledError(
+                        f"shard {s} producer made no progress for "
+                        f"{self._watchdog}s and exhausted its "
+                        f"{self._max_retries} restarts"))
+                elif fresh:
+                    cancel = threading.Event()
+                    self._cancels[s] = cancel
+                    try:
+                        src = self._restart(s, skip)
+                    except BaseException as exc:
+                        self._offer(self._queues[s], exc)
+                        continue
+                    self._spawn(s, src, cancel)
 
     def _resolve(self, item, s: int):
         if item is _STREAM_DONE:

@@ -67,6 +67,18 @@ from repro.core.digraph import CompactDigraph, canonical_pairs
 INTER_SIDE_BIT = 2
 
 
+class PlanOverflowError(ValueError):
+    """A plan (or one window of a streamed plan) would exceed the int32
+    packed-item indexing / per-window int32 accumulator lanes.
+
+    Raised at *plan time* wherever an item count could reach ``2**31``,
+    so the failure is a clear actionable message instead of a silent
+    int32 wraparound deep inside a compiled step.  Subclasses
+    :class:`ValueError` for backward compatibility with callers that
+    caught the old generic guard.
+    """
+
+
 def pack_items(item_slot: np.ndarray, item_side: np.ndarray,
                item_pair: np.ndarray, item_valid: np.ndarray
                ) -> tuple[np.ndarray, np.ndarray]:
@@ -777,9 +789,10 @@ def build_plan(g: CompactDigraph, pad_to: int = 1,
     # stays zero-length — no phantom padded items)
     wp = -(-num_items // pad_to) * pad_to
     if wp >= 2**31:
-        raise ValueError("plan exceeds int32 packed-item indexing; "
-                         "stream it in chunks (CensusEngine max_items) "
-                         "or shard the graph first")
+        raise PlanOverflowError(
+            "plan exceeds int32 packed-item indexing; "
+            "stream it in chunks (CensusEngine max_items) "
+            "or shard the graph first")
     item_sp, item_pv = pad_and_pack(item_pair, item_slot, item_side, wp)
     base_asym, base_mut = global_bases(space)
     return CensusPlan(

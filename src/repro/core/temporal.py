@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.engine import (
     CensusEngine, EMIT_MODES, EngineStats, MAX_WINDOWS_PER_DISPATCH,
     PIPELINE_DEPTH)
+from repro.core.faults import FaultError
 from repro.core.tricode import TRIAD_NAMES
 
 #: Paper Fig 3: triad patterns relevant to computer-network monitoring.
@@ -128,6 +129,13 @@ class TriadMonitor:
         update (``None`` — the engine default, ``"device"`` — stream
         O(affected pairs) descriptors and expand in-kernel, ``"host"`` —
         materialize items in numpy; bit-identical either way).
+    faults / max_retries / retry_backoff / watchdog_timeout : forwarded
+        to the :class:`~repro.core.engine.CensusEngine` fault-tolerance
+        layer.  A window whose census still fails after the retry budget
+        does NOT kill the monitor: the window is recorded as *degraded*
+        (:attr:`degraded` — the previous census is carried forward so
+        the alarm baseline stays aligned) and the next window forces a
+        full recompute, re-syncing the resident session.
     """
 
     def __init__(self, n_nodes: int, window: int = 1000,
@@ -142,7 +150,10 @@ class TriadMonitor:
                  pipeline_depth: int = PIPELINE_DEPTH,
                  max_windows_per_dispatch: int =
                  MAX_WINDOWS_PER_DISPATCH,
-                 auto_rebalance_threshold: float | None = None):
+                 auto_rebalance_threshold: float | None = None,
+                 faults=None, max_retries: int = 2,
+                 retry_backoff: float = 0.01,
+                 watchdog_timeout: float | None = None):
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
         if window < 1:
@@ -172,7 +183,10 @@ class TriadMonitor:
         self.engine = CensusEngine(
             mesh=mesh, backend=backend, partition=partition,
             schedule=schedule, pipeline_depth=pipeline_depth,
-            max_windows_per_dispatch=max_windows_per_dispatch)
+            max_windows_per_dispatch=max_windows_per_dispatch,
+            faults=faults, max_retries=max_retries,
+            retry_backoff=retry_backoff,
+            watchdog_timeout=watchdog_timeout)
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
         self._arcset: np.ndarray | None = None      # current window's arcs
@@ -181,16 +195,35 @@ class TriadMonitor:
         self.window_stats: list[EngineStats] = []
         self._alarm_cache: list[dict] = []
         self._next_alarm_t = self.history
+        #: windows whose census failed past the retry budget and were
+        #: recorded by carrying the previous census forward
+        self.degraded: list[dict] = []
+        self._force_full = False
+        self.last_t: float | None = None
 
     # ------------------------------------------------------------ ingest
     def _validate(self, src, dst) -> np.ndarray:
-        """Ravel + validate one batch the way ``from_edges`` does, plus an
-        explicit error for empty batches (a silent degenerate census was
-        the old failure mode)."""
-        src = np.asarray(src, dtype=np.int64).ravel()
-        dst = np.asarray(dst, dtype=np.int64).ravel()
+        """Ravel + validate one batch the way ``from_edges`` does, plus
+        explicit errors for the failure modes that used to surface deep
+        inside CSR edits: empty batches, ragged (object-dtype) arrays,
+        non-finite float ids, and out-of-range vertices."""
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        if src.dtype == object or dst.dtype == object:
+            raise ValueError(
+                "ragged edge batch: src/dst must be rectangular numeric "
+                "arrays (got object dtype — rows of unequal length?)")
+        for name, a in (("src", src), ("dst", dst)):
+            if np.issubdtype(a.dtype, np.floating) \
+                    and not np.isfinite(a).all():
+                raise ValueError(
+                    f"non-finite vertex id (NaN/inf) in {name}")
+        src = src.astype(np.int64).ravel()
+        dst = dst.astype(np.int64).ravel()
         if src.shape != dst.shape:
-            raise ValueError("src/dst length mismatch")
+            raise ValueError(
+                f"src/dst length mismatch: {src.shape[0]} != "
+                f"{dst.shape[0]}")
         if src.size == 0:
             raise ValueError(
                 "empty edge batch: a census window cannot be empty")
@@ -200,29 +233,74 @@ class TriadMonitor:
                 f"vertex id out of range [0, {self.n_nodes})")
         return src * self.n_nodes + dst
 
-    def observe(self, src, dst) -> np.ndarray:
+    def _validate_times(self, t, count: int) -> None:
+        t = np.asarray(t, dtype=np.float64).ravel()
+        if t.shape[0] != count:
+            raise ValueError(
+                f"timestamps/edges length mismatch: {t.shape[0]} != "
+                f"{count}")
+        if np.isnan(t).any():
+            raise ValueError("NaN timestamp in edge batch")
+        if (t < 0).any():
+            raise ValueError(
+                f"negative timestamp in edge batch (min {t.min()})")
+        if self.last_t is not None and t.size and t[0] < self.last_t:
+            raise ValueError(
+                f"timestamps regressed: batch starts at {t[0]} but the "
+                f"stream is already at {self.last_t}")
+        if t.size:
+            self.last_t = float(t[-1])
+
+    def observe(self, src, dst, t=None) -> np.ndarray:
         """Ingest a batch of stream edges; returns the ``(k, 16)`` censuses
         of the windows this batch completed (possibly empty).
 
         Feeding exactly ``window`` edges per call with the default
         tumbling stride emits exactly one census per call — the legacy
-        one-batch-one-window usage.
+        one-batch-one-window usage.  ``t`` (optional per-edge timestamps)
+        is validated — NaN, negative, or regressing values are rejected
+        at the edge — but does not affect windowing, which is count-based.
         """
-        self._buf = np.concatenate([self._buf, self._validate(src, dst)])
+        eids = self._validate(src, dst)
+        if t is not None:
+            self._validate_times(t, eids.shape[0])
+        self._buf = np.concatenate([self._buf, eids])
         out = []
         w, s = self.window, self.stride
         while True:
             if self._arcset is None:
                 if self._buf.shape[0] < w:
                     break
-                out.append(self._emit_full(self._buf[:w]))
+                out.append(self._guarded(self._emit_full, self._buf[:w]))
             else:
                 if self._buf.shape[0] < w + s:
                     break
-                out.append(self._emit_slide(self._buf[s:s + w]))
+                out.append(self._guarded(self._emit_slide,
+                                         self._buf[s:s + w]))
                 self._buf = self._buf[s:]
         return (np.stack(out) if out
                 else np.zeros((0, len(TRIAD_NAMES)), dtype=np.int64))
+
+    def _guarded(self, emit, win: np.ndarray) -> np.ndarray:
+        """Run one window emission under the monitor's degradation
+        contract: a census that fails past the engine's retry budget is
+        recorded as a *degraded* window carrying the previous census
+        forward (the alarm baseline stays aligned with the stream), and
+        the next window forces a full recompute to re-sync the resident
+        session.  Only the very first window — with no census to carry —
+        re-raises."""
+        try:
+            census = emit(win)
+        except FaultError as exc:
+            if not self._censuses:
+                raise
+            self.degraded.append(
+                {"window": len(self._censuses), "error": str(exc)})
+            self._force_full = True
+            self.window_stats.append(None)   # keeps lengths aligned
+            return self._record(self._censuses[-1].copy())
+        self._force_full = False
+        return census
 
     def _emit_full(self, win: np.ndarray) -> np.ndarray:
         """Full census of a window (first window, tumbling slides, or
@@ -248,8 +326,10 @@ class TriadMonitor:
 
     def _emit_slide(self, win: np.ndarray) -> np.ndarray:
         """Census of the next window, delta-updated when it overlaps the
-        previous one and ``incremental`` is on."""
-        if not self.incremental or self.stride >= self.window:
+        previous one and ``incremental`` is on (or from scratch after a
+        degraded window — the resident session must re-sync)."""
+        if self._force_full or not self.incremental \
+                or self.stride >= self.window:
             return self._emit_full(win)
         arcs = np.unique(win)
         add = np.setdiff1d(arcs, self._arcset, assume_unique=True)
