@@ -1019,12 +1019,16 @@ def twod_smoke(rows: list):
 
 
 def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
-                    backbone_every=2):
+                    backbone_every=2, eph_every=None):
     """Monitoring workload: a persistent service backbone (a fixed server
     mesh cycled through the stream, so it sits in every window and never
     churns) interleaved with ephemeral peer-to-peer flows that churn
     completely between windows — the regime where incremental window
-    updates pay (arc deltas touch few rows)."""
+    updates pay (arc deltas touch few rows).  ``backbone_every=k`` makes
+    every k-th stream slot a backbone edge (fraction 1/k); ``eph_every=k``
+    inverts the cadence — every k-th slot is EPHEMERAL and the rest are
+    backbone (fraction (k-1)/k), the backbone-dominated regime where the
+    pair space is large but the per-slide delta stays small."""
     n = n_servers + n_peers
     bs = rng.integers(0, n_servers, backbone_arcs)
     bd = (bs + 1 + rng.integers(0, n_servers - 1, backbone_arcs)) \
@@ -1032,8 +1036,12 @@ def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
     src = np.empty(length, np.int64)
     dst = np.empty(length, np.int64)
     slots = np.arange(length)
-    bb = slots % backbone_every == 0
-    idx = (slots[bb] // backbone_every) % backbone_arcs
+    if eph_every is not None:
+        bb = slots % eph_every != 0
+        idx = (np.cumsum(bb) - 1)[bb] % backbone_arcs
+    else:
+        bb = slots % backbone_every == 0
+        idx = (slots[bb] // backbone_every) % backbone_arcs
     src[bb], dst[bb] = bs[idx], bd[idx]
     n_peer_slots = int((~bb).sum())
     src[~bb] = n_servers + rng.integers(0, n_peers, n_peer_slots)
@@ -1042,11 +1050,11 @@ def _monitor_stream(rng, n_servers, n_peers, backbone_arcs, length,
 
 
 def _run_monitor(src, dst, n, window, stride, incremental,
-                 backend="jnp", max_items=4096):
+                 backend="jnp", max_items=4096, index=True):
     from repro.core import TriadMonitor
     mon = TriadMonitor(n, window=window, stride=stride, history=5,
                        backend=backend, incremental=incremental,
-                       max_items=max_items)
+                       max_items=max_items, index=index)
     t0 = time.perf_counter()
     mon.observe(src, dst)
     dt = time.perf_counter() - t0
@@ -1132,6 +1140,86 @@ def temporal_smoke(rows: list):
                      f"step_compiles={compiles};parity=ok"))
 
 
+def incr_host_smoke(rows: list):
+    """CI gate (benchmarks/check.sh --incr-host-smoke): the
+    delta-incremental host planner.  Warm sliding-window updates with the
+    persistent pair-space index must be (a) bit-identical to the
+    rebuild-from-scratch oracle (``index=False``), (b) >= 1.5x faster
+    end-to-end in walltime at a 5% stride, and (c) >= 1.3x faster in the
+    pair-space host phase alone.
+
+    The workload is the backbone-dominated monitoring regime the index
+    targets: a large stable service backbone (the pair space stays at
+    P ~ 150k) with a small ephemeral churn fraction (1 slot in 50), under
+    the degree-oriented planner — per slide the oracle rebuilds the O(P)
+    pair space and repays the O(m + P log m) post-prune closed form,
+    while the index edits both in O(delta log P + affected).
+    """
+    from repro.core import TriadMonitor
+    rng = np.random.default_rng(0)
+    window = 200_000
+    n_slides = {0.05: 8, 0.20: 4}
+    length = window + int(max(f * s for f, s in n_slides.items())
+                          * window)
+    src, dst, n = _monitor_stream(rng, 20000, 50000, 150000, length,
+                                  eph_every=50)
+    for frac, gates in ((0.05, (1.5, 1.3)), (0.20, None)):
+        stride = int(window * frac)
+        end = window + n_slides[frac] * stride
+        runs = {}
+        for index in (True, False):
+            mon = TriadMonitor(n, window=window, stride=stride,
+                               history=5, backend="jnp", orient="degree",
+                               incremental=True, max_items=16384,
+                               index=index)
+            # first window: full census — session open + jit warm for
+            # both modes, so the timed region is pure warm updates
+            mon.observe(src[:window], dst[:window])
+            t0 = time.perf_counter()
+            mon.observe(src[window:end], dst[window:end])
+            runs[index] = (mon, time.perf_counter() - t0)
+        mon_on, dt_on = runs[True]
+        mon_off, dt_off = runs[False]
+        if not (mon_on.censuses == mon_off.censuses).all():
+            raise AssertionError(
+                f"indexed censuses != rebuild oracle at stride "
+                f"{frac:.0%}")
+        slid = [s for s in mon_on.window_stats[1:] if s is not None]
+        slid_off = [s for s in mon_off.window_stats[1:] if s is not None]
+        if [s.full_items for s in slid] != \
+                [s.full_items for s in slid_off]:
+            raise AssertionError(
+                "maintained post-prune item totals != oracle recompute")
+        speedup = dt_off / max(dt_on, 1e-9)
+        pair_on = sum(s.host_pair_seconds for s in slid)
+        pair_off = sum(s.host_pair_seconds for s in slid_off)
+        pair_speedup = pair_off / max(pair_on, 1e-9)
+        if gates is not None:
+            wall_gate, pair_gate = gates
+            if speedup < wall_gate:
+                raise AssertionError(
+                    f"indexed warm updates only {speedup:.2f}x faster "
+                    f"than the per-window rebuild at stride {frac:.0%} "
+                    f"(gate {wall_gate}x)")
+            if pair_speedup < pair_gate:
+                raise AssertionError(
+                    f"indexed pair-space phase only {pair_speedup:.2f}x "
+                    f"faster than the rebuild at stride {frac:.0%} "
+                    f"(gate {pair_gate}x)")
+        host_on = sum(s.plan_host_seconds for s in slid)
+        host_off = sum(s.plan_host_seconds for s in slid_off)
+        tag = f"s{int(frac * 100):02d}"
+        rows.append((
+            f"incr_host_{tag}", dt_on / max(len(slid), 1) * 1e6,
+            f"windows={len(slid)};walltime_speedup={speedup:.2f}x;"
+            f"pair_speedup={pair_speedup:.2f}x;"
+            f"host_s={host_on:.3f}/{host_off:.3f};"
+            f"host_pair_s={pair_on:.3f};"
+            f"host_merge_s={sum(s.host_merge_seconds for s in slid):.3f};"
+            f"host_emit_s={sum(s.host_emit_seconds for s in slid):.3f};"
+            f"parity=ok"))
+
+
 def run(rows: list):
     fig6_degree_distributions(rows)
     fig9_balance(rows)
@@ -1147,6 +1235,7 @@ def run(rows: list):
     partitioned_scaling(rows)
     dispatch_overhead(rows)
     temporal_windows(rows)
+    incr_host_smoke(rows)
 
 
 def run_smoke(rows: list):

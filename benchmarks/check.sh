@@ -64,6 +64,17 @@
 # (>= 2x at (2,4)) on the power-law workload, and no total resident-
 # byte regression at (4,2).
 #
+# The incr-host smoke (benchmarks/run.py --incr-host-smoke) runs warm
+# sliding-window updates on the backbone-dominated monitoring workload
+# (P ~ 150k pair space, 1-in-50 ephemeral churn, degree-oriented
+# planner) with the persistent delta-incremental pair-space index
+# (sessions' default) against the rebuild-from-scratch oracle
+# (index=False) and asserts bit-identical censuses AND post-prune item
+# totals, >= 1.5x warm-update walltime and >= 1.3x pair-space host
+# phase at a 5% stride — so the O(delta log P + affected) host planner
+# can never silently regress to the O(P) per-window rebuild + closed-
+# form rescan it replaced.
+#
 # The fault smoke (benchmarks/run.py --fault-smoke) arms the fault-
 # tolerance layer on an 8-virtual-device mesh and asserts three things:
 # a seeded FaultPlan carrying a producer plan-gen error, a transient
@@ -107,6 +118,9 @@ python -m benchmarks.run --mega-smoke
 
 echo "== 2d smoke (pair×vertex mesh == 1D == reference, >= 1.5x further halo cut) =="
 python -m benchmarks.run --2d-smoke
+
+echo "== incr-host smoke (indexed planner == rebuild oracle, >= 1.5x warm updates, >= 1.3x pair phase) =="
+python -m benchmarks.run --incr-host-smoke
 
 echo "== fault smoke (inject + retry + fail over + resume, still bit-identical) =="
 python -m benchmarks.run --fault-smoke

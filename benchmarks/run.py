@@ -83,6 +83,15 @@ def main() -> None:
                          "within 1.05x of plain async; a run killed "
                          "mid-stream must checkpoint-resume to the "
                          "exact same census")
+    ap.add_argument("--incr-host-smoke", action="store_true",
+                    help="delta-incremental host-planner gate: warm "
+                         "sliding-window updates with the persistent "
+                         "pair-space index must be bit-identical to the "
+                         "per-window rebuild oracle (censuses AND "
+                         "post-prune item totals), >= 1.5x faster in "
+                         "walltime and >= 1.3x in the pair-space host "
+                         "phase at a 5%% stride on the backbone-"
+                         "dominated degree-oriented workload")
     ap.add_argument("--async-smoke", action="store_true",
                     help="async-schedule gate: on a synthetic 4x-skewed "
                          "8-shard partition, async per-shard streams "
@@ -115,6 +124,8 @@ def main() -> None:
         census_bench.twod_smoke(rows)
     elif args.mega_smoke:
         census_bench.mega_smoke(rows)
+    elif args.incr_host_smoke:
+        census_bench.incr_host_smoke(rows)
     elif args.async_smoke:
         census_bench.async_smoke(rows)
     elif args.partition_smoke:

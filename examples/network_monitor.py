@@ -93,6 +93,18 @@ def main():
                          "the retry budget — the monitor must survive, "
                          "retrying what it can and logging the rest as "
                          "degraded windows instead of dying")
+    ap.add_argument("--index", dest="index", action="store_true",
+                    default=True,
+                    help="maintain a persistent pair-space index so "
+                         "each slide edits the plan by the delta "
+                         "(default)")
+    ap.add_argument("--no-index", dest="index", action="store_false",
+                    help="rebuild the pair space from scratch every "
+                         "window — the parity oracle for --index")
+    ap.add_argument("--profile-host", action="store_true",
+                    help="print the per-window host planning time split "
+                         "(pair-space / delta-merge / item-emission "
+                         "buckets) next to the device dispatch numbers")
     ap.add_argument("--verbose", action="store_true",
                     help="print the per-window engine summary lines")
     args = ap.parse_args()
@@ -141,7 +153,7 @@ def main():
         n_hosts, window=per_window, stride=stride, history=history,
         threshold=args.threshold, backend=args.backend,
         incremental=not args.no_incremental,
-        max_items=4096, emit=args.emit,
+        max_items=4096, emit=args.emit, index=args.index,
         mesh=mesh, partition=mesh is not None, faults=faults)
 
     scan_size = 200
@@ -191,17 +203,35 @@ def main():
                      f" mom={st.shard_max_over_mean:.2f}"
                      f" gbytes={st.graph_resident_bytes}"
                      f"/{st.graph_replicated_bytes}")
+        host = ""
+        if args.profile_host:
+            host = (f" host={st.plan_host_seconds * 1e3:.2f}ms"
+                    f"[pair={st.host_pair_seconds * 1e3:.2f}"
+                    f" merge={st.host_merge_seconds * 1e3:.2f}"
+                    f" emit={st.host_emit_seconds * 1e3:.2f}]"
+                    f"{'' if st.indexed else ' (no index)'}")
         line = (f"  window {t:>3}  items={st.items:>7}/{st.full_items:<7}"
                 f" chunks={st.chunks:<2} affected_pairs="
-                f"{st.affected_pairs:<5}{shard} "
+                f"{st.affected_pairs:<5}{shard}{host} "
                 f"{('ALARM ' + fired) if fired else ''}")
-        if args.verbose or fired:
+        if args.verbose or fired or args.profile_host:
             print(line)
     print(f"\ntotals: {total_items} items dispatched vs {total_full} for "
           f"full per-window recomputes "
           f"({total_full / max(total_items, 1):.2f}x reduction); "
           f"chunk step compiles: "
           f"{sum(s.step_compiles for s in monitor.window_stats if s)}")
+    if args.profile_host:
+        live = [s for s in monitor.window_stats if s is not None]
+        pair = sum(s.host_pair_seconds for s in live)
+        merge = sum(s.host_merge_seconds for s in live)
+        emit = sum(s.host_emit_seconds for s in live)
+        mode = "indexed" if args.index else "full per-window rebuild"
+        print(f"host planning totals ({mode}): "
+              f"{(pair + merge + emit) * 1e3:.1f}ms = "
+              f"pair-space {pair * 1e3:.1f}ms + delta-merge "
+              f"{merge * 1e3:.1f}ms + emission {emit * 1e3:.1f}ms "
+              f"over {len(live)} windows")
     if args.inject_faults is not None:
         sess = monitor._session
         print(f"\nfault injection (seed {args.inject_faults}): "

@@ -58,6 +58,7 @@ from repro.core.engine import (
 from repro.core.incremental import (
     affected_pair_ids, subset_contribution, subset_descriptor_windows,
     verify_delta_closure)
+from repro.core.pair_index import IndexCorruptionError, PairSpaceIndex
 from repro.core.partition import (
     GraphPartition, GraphPartition2D, LocalShard, PartitionStats,
     extract_shard, lpt_assign, lpt_assign_heap, partition_graph,
@@ -90,6 +91,7 @@ __all__ = [
     "PartitionedEngineSession2D",
     "affected_pair_ids", "subset_contribution",
     "subset_descriptor_windows", "verify_delta_closure",
+    "IndexCorruptionError", "PairSpaceIndex",
     "GraphPartition", "GraphPartition2D", "LocalShard", "PartitionStats",
     "extract_shard", "lpt_assign", "lpt_assign_heap", "partition_graph",
     "partition_graph_2d", "replicated_graph_bytes", "vertex_slices",

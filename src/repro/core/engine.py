@@ -86,6 +86,7 @@ from repro.core.faults import FaultError, FaultPlan, poison_result
 from repro.core.incremental import (
     affected_pair_ids, combine, contribution_counts,
     subset_descriptor_windows)
+from repro.core.pair_index import PairSpaceIndex
 from repro.core.partition import (
     extract_shard, partition_graph, partition_graph_2d,
     range_postprune_pair_counts, slice_pair_terms,
@@ -506,6 +507,25 @@ class EngineStats:
     retired_devices: list = field(default_factory=list)
     #: windows restored from a checkpoint journal instead of re-executed
     resumed_windows: int = 0
+    #: host planning walltime of the run, split by phase: pair-space
+    #: maintenance (full ``pair_space`` rebuild, or the delta-incremental
+    #: index edit + affected-pair discovery when ``indexed``), the
+    #: ``apply_delta`` CSR/pair-code diff, and host-side work emission
+    #: (item materialization / descriptor-window construction, measured
+    #: inside the dispatch loop so device wait time is excluded)
+    host_pair_seconds: float = 0.0
+    host_merge_seconds: float = 0.0
+    host_emit_seconds: float = 0.0
+    #: True when the run's pair space came from the session's persistent
+    #: :class:`~repro.core.pair_index.PairSpaceIndex` instead of a full
+    #: O(P) rebuild
+    indexed: bool = False
+
+    @property
+    def plan_host_seconds(self) -> float:
+        """Total host planning walltime (sum of the three phase buckets)."""
+        return (self.host_pair_seconds + self.host_merge_seconds
+                + self.host_emit_seconds)
 
     @property
     def shard_max_over_mean(self) -> float:
@@ -552,6 +572,11 @@ class EngineStats:
                      f"retired={self.retired_devices} "
                      f"watchdog_fires={self.watchdog_fires} "
                      f"resumed={self.resumed_windows}]")
+        if self.plan_host_seconds:
+            part += (f" host[pair={self.host_pair_seconds * 1e3:.2f}ms"
+                     f" merge={self.host_merge_seconds * 1e3:.2f}ms"
+                     f" emit={self.host_emit_seconds * 1e3:.2f}ms"
+                     f"{' indexed' if self.indexed else ''}]")
         return (f"{self.backend} [{mode} emit={self.emit}] "
                 f"chunks={self.chunks} items={self.items} "
                 f"peak_plan_bytes={self.peak_plan_bytes} "
@@ -904,10 +929,85 @@ class CensusEngine:
                 f"run with run(..., checkpoint=path) first")
         return self.run(g, checkpoint=checkpoint, **kwargs)
 
+    @staticmethod
+    def compact_checkpoint(checkpoint: str) -> dict:
+        """Fold an append-only checkpoint journal into its minimal form.
+
+        A long checkpointed run appends one JSONL record per landed
+        dispatch, so the journal grows with the window count even though
+        resume only needs the *sums*.  Compaction rewrites the file as
+        the fingerprint header plus ONE merged record per shard (summed
+        partials, unioned window ids, concatenated per-window item
+        counts) — the landing merge is an integer sum over independent
+        windows, so :meth:`resume` restores the compacted journal to the
+        exact state the full journal would have produced, and keeps
+        appending new landings after it (``_load`` is additive per
+        record; both forms read identically).
+
+        Duplicate landings and a torn final line are dropped the same
+        way loading drops them.  The rewrite is atomic (temp file +
+        ``os.replace``), so a kill mid-compaction leaves the original
+        journal intact.  Returns ``{"records", "compacted", "bytes",
+        "compacted_bytes"}``.
+        """
+        if not os.path.exists(checkpoint):
+            raise FileNotFoundError(
+                f"no checkpoint journal at {checkpoint!r}")
+        old_bytes = os.path.getsize(checkpoint)
+        with open(checkpoint) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+        if not lines:
+            raise FaultError(
+                f"checkpoint {checkpoint!r} is empty — nothing to "
+                f"compact")
+        head = json.loads(lines[0])
+        if head.get("v") != _CheckpointJournal.VERSION:
+            raise FaultError(
+                f"checkpoint {checkpoint!r} has unknown version "
+                f"{head.get('v')!r}")
+        # replay the records exactly the way _load does (skip duplicate
+        # landings and the torn tail), but keep the sums per shard
+        merged: dict = {}
+        records = 0
+        for ln in lines[1:]:
+            try:
+                rec = json.loads(ln)
+            except json.JSONDecodeError:
+                break
+            records += 1
+            s = int(rec["s"])
+            m = merged.setdefault(s, {
+                "ids": set(), "hist": np.zeros(64, np.int64),
+                "inter": np.zeros(2, np.int64), "items": []})
+            ids = {int(x) for x in rec["ids"]}
+            if ids & m["ids"]:
+                continue
+            m["ids"] |= ids
+            m["hist"] += np.asarray(rec["hist"], dtype=np.int64)
+            m["inter"] += np.asarray(rec["inter"], dtype=np.int64)
+            m["items"].extend(int(x) for x in rec["items"])
+        tmp = checkpoint + ".compact.tmp"
+        with open(tmp, "w") as f:
+            f.write(json.dumps(head) + "\n")
+            for s in sorted(merged):
+                m = merged[s]
+                f.write(json.dumps({
+                    "s": s, "ids": sorted(m["ids"]),
+                    "hist": [int(x) for x in m["hist"]],
+                    "inter": [int(x) for x in m["inter"]],
+                    "items": m["items"]}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, checkpoint)
+        return {"records": records, "compacted": len(merged),
+                "bytes": old_bytes,
+                "compacted_bytes": os.path.getsize(checkpoint)}
+
     def session(self, g: CompactDigraph, *, orient: str = "none",
                 prune_self: bool = True, max_items: int | None = None,
                 emit: str | None = None,
-                auto_rebalance_threshold: float | None = None):
+                auto_rebalance_threshold: float | None = None,
+                index: bool = True):
         """Open a resident-graph session on ``g`` for repeated / sliding-
         window censuses (see :class:`EngineSession`; a partitioned engine
         opens a :class:`PartitionedEngineSession`, whose delta updates
@@ -915,24 +1015,30 @@ class CensusEngine:
         ``auto_rebalance_threshold`` (partitioned only) re-shards the
         session with a fresh LPT whenever churn pushes the load
         ``max/mean`` past it (see
-        :meth:`PartitionedEngineSession.rebalance`)."""
+        :meth:`PartitionedEngineSession.rebalance`).  ``index`` keeps a
+        persistent :class:`~repro.core.pair_index.PairSpaceIndex` so
+        warm ``update()`` calls edit the pair space in O(delta · log P)
+        instead of rebuilding it in O(P); ``index=False`` is the
+        rebuild-from-scratch oracle path (bit-identical either way)."""
         if self.partition:
             if self.partition_2d is not None:
                 return PartitionedEngineSession2D(
                     self, g, mesh_shape=self.partition_2d,
                     orient=orient, prune_self=prune_self,
                     max_items=max_items, emit=emit,
-                    auto_rebalance_threshold=auto_rebalance_threshold)
+                    auto_rebalance_threshold=auto_rebalance_threshold,
+                    index=index)
             return PartitionedEngineSession(
                 self, g, orient=orient, prune_self=prune_self,
                 max_items=max_items, emit=emit,
-                auto_rebalance_threshold=auto_rebalance_threshold)
+                auto_rebalance_threshold=auto_rebalance_threshold,
+                index=index)
         if auto_rebalance_threshold is not None:
             raise ValueError(
                 "auto_rebalance_threshold requires partition=True")
         return EngineSession(self, g, orient=orient,
                              prune_self=prune_self,
-                             max_items=max_items, emit=emit)
+                             max_items=max_items, emit=emit, index=index)
 
     def _run_stream(self, chunker: PlanChunker, progress) -> np.ndarray:
         space = chunker.space
@@ -1601,6 +1707,27 @@ def _pad_i32(a: np.ndarray, cap: int) -> np.ndarray:
     return out
 
 
+class _TimedIter:
+    """Wrap an iterator, accumulating the walltime spent *inside*
+    ``next()`` — the host-side plan/window construction cost of a lazy
+    emission stream, excluding the consumer's device-wait time (the
+    ``host_emit_seconds`` stats bucket)."""
+
+    def __init__(self, it):
+        self._it = iter(it)
+        self.seconds = 0.0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        t0 = time.perf_counter()
+        try:
+            return next(self._it)
+        finally:
+            self.seconds += time.perf_counter() - t0
+
+
 def _split_capacity_compiles(session, chunk_items: list, compiles: int
                              ) -> tuple[int, int]:
     """(capacity_recompiles, step_compiles) attribution shared by both
@@ -1745,7 +1872,8 @@ class EngineSession:
 
     def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
                  orient: str = "none", prune_self: bool = True,
-                 max_items: int | None = None, emit: str | None = None):
+                 max_items: int | None = None, emit: str | None = None,
+                 index: bool = True):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
         emit = engine.emit if emit is None else emit
@@ -1758,6 +1886,12 @@ class EngineSession:
         self.emit = emit
         self.n = g.n
         self.max_items = max_items
+        #: delta-incremental host planning: keep a persistent
+        #: :class:`PairSpaceIndex` and edit it per update instead of
+        #: rebuilding the O(P) pair space (False == rebuild oracle)
+        self.use_index = bool(index)
+        self._pair_index: PairSpaceIndex | None = None
+        self._t_pair = self._t_merge = self._t_emit = 0.0
         #: pinned unrolled-search depth: any row has < n entries, so this
         #: upper bound keeps the jitted step valid for every graph revision
         self.search_iters = max(1, int(np.ceil(np.log2(max(g.n, 2)))))
@@ -1851,12 +1985,21 @@ class EngineSession:
         self._idx = self.engine._put(
             jnp.arange(cs, dtype=jnp.int32), self._item_sh)
 
-    def _install(self, g: CompactDigraph) -> None:
-        """Make ``g`` the resident graph: rebuild the pair space and
+    def _install(self, g: CompactDigraph, space=None) -> None:
+        """Make ``g`` the resident graph: rebuild the pair space (or
+        adopt the prebuilt ``space`` an index edit produced) and
         (re)upload the padded device arrays."""
         self._g = g
-        space = pair_space(g, orient=self.orient,
-                           prune_self=self.prune_self)
+        if space is None:
+            t0 = time.perf_counter()
+            if self.use_index:
+                self._pair_index = PairSpaceIndex(
+                    g, orient=self.orient, prune_self=self.prune_self)
+                space = self._pair_index.space
+            else:
+                space = pair_space(g, orient=self.orient,
+                                   prune_self=self.prune_self)
+            self._t_pair += time.perf_counter() - t0
         self._space = space
         self._full_items: int | None = None   # lazy per-install stat
         if self.chunk_shape is None:
@@ -2010,14 +2153,18 @@ class EngineSession:
         base_asym, base_mut = base_for_pairs(self._space, pair_ids)
         if self.emit == "device":
             ids = np.asarray(pair_ids, dtype=np.int64).ravel()
-            hist, inter, chunk_items = self._run_desc_batches(
+            wins = _TimedIter(
                 subset_descriptor_windows(self._space, ids,
                                           self.chunk_shape,
                                           self.desc_shape,
                                           self.num_anchors))
+            hist, inter, chunk_items = self._run_desc_batches(wins)
+            self._t_emit += wins.seconds
             return (contribution_counts(base_asym, base_mut, hist, inter),
                     int(sum(chunk_items)), chunk_items)
+        t0 = time.perf_counter()
         items = emit_items_for_pairs(self._space, pair_ids)
+        self._t_emit += time.perf_counter() - t0
         num_items = int(items[0].shape[0])
         if num_items == 0:
             return (contribution_counts(base_asym, base_mut,
@@ -2029,10 +2176,14 @@ class EngineSession:
 
     def _postprune_items(self) -> int:
         """Full-recompute item count of the resident graph, computed at
-        most once per graph revision (the degree-orient closed form costs
-        an O(m + P log m) scan — stats only, never the hot path)."""
+        most once per graph revision.  The index's maintained per-pair
+        cost vector answers it with an O(P) sum; the rebuild oracle pays
+        the O(m + P log m) degree-orient closed-form scan instead."""
         if self._full_items is None:
-            self._full_items = self._space.num_items_postprune()
+            if self.use_index and self._pair_index is not None:
+                self._full_items = int(self._pair_index.costs.sum())
+            else:
+                self._full_items = self._space.num_items_postprune()
         return self._full_items
 
     def _cache_size(self) -> int:
@@ -2068,7 +2219,11 @@ class EngineSession:
                 else ITEM_BYTES * self.chunk_shape // ndev),
             capacity_recompiles=capacity_recompiles,
             retries=self.retries,
-            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes)
+            graph_resident_bytes=gbytes, graph_replicated_bytes=gbytes,
+            host_pair_seconds=self._t_pair,
+            host_merge_seconds=self._t_merge,
+            host_emit_seconds=self._t_emit, indexed=self.use_index)
+        self._t_pair = self._t_merge = self._t_emit = 0.0
         self.engine.stats = self.stats
 
     def census(self) -> np.ndarray:
@@ -2084,14 +2239,17 @@ class EngineSession:
         w0 = space.num_items_preprune
         cs = self.chunk_shape
         if self.emit == "device":
-            hist, inter, chunk_items = self._run_desc_batches(
+            wins = _TimedIter(
                 iter_descriptor_windows(space.offsets, cs,
                                         self.desc_shape,
                                         self.num_anchors))
+            hist, inter, chunk_items = self._run_desc_batches(wins)
+            self._t_emit += wins.seconds
         else:
-            batches = (emit_items(space, lo, min(lo + cs, w0))
-                       for lo in range(0, w0, cs))
+            batches = _TimedIter(emit_items(space, lo, min(lo + cs, w0))
+                                 for lo in range(0, w0, cs))
             hist, inter, chunk_items = self._run_batches(batches)
+            self._t_emit += batches.seconds
         base_asym, base_mut = global_bases(space)
         self._census = assemble_counts(self.n, base_asym, base_mut,
                                        hist, inter)
@@ -2112,8 +2270,10 @@ class EngineSession:
             raise RuntimeError(
                 "no baseline census: call census() before update()")
         cache0 = self._cache_size()
+        t0 = time.perf_counter()
         g_new, delta = apply_delta(self._g, add_src, add_dst,
                                    del_src, del_dst)
+        self._t_merge += time.perf_counter() - t0
         self.last_delta = delta
         if delta.num_changed == 0:
             # nothing changed: no recount, no descriptor/item upload, no
@@ -2122,10 +2282,26 @@ class EngineSession:
                             self._cache_size() - cache0)
             return self._census.copy()
 
-        aff_old = affected_pair_ids(self._space, delta.touched)
+        t0 = time.perf_counter()
+        aff_old = (self._pair_index.affected_pair_ids(delta.touched)
+                   if self.use_index
+                   else affected_pair_ids(self._space, delta.touched))
+        self._t_pair += time.perf_counter() - t0
         contrib_old, items_old, chunks_old = self._subset(aff_old)
-        self._install(g_new)
-        aff_new = affected_pair_ids(self._space, delta.touched)
+        if self.use_index:
+            # edit the persistent index into the new graph's pair space
+            # (O(delta · log P + affected)) instead of rebuilding O(P)
+            t0 = time.perf_counter()
+            space_new = self._pair_index.apply(delta, g_new)
+            self._t_pair += time.perf_counter() - t0
+            self._install(g_new, space=space_new)
+        else:
+            self._install(g_new)
+        t0 = time.perf_counter()
+        aff_new = (self._pair_index.affected_pair_ids(delta.touched)
+                   if self.use_index
+                   else affected_pair_ids(self._space, delta.touched))
+        self._t_pair += time.perf_counter() - t0
         contrib_new, items_new, chunks_new = self._subset(aff_new)
         self._census = combine(self._census, contrib_old, contrib_new,
                                self.n)
@@ -2177,7 +2353,8 @@ class PartitionedEngineSession:
     def __init__(self, engine: CensusEngine, g: CompactDigraph, *,
                  orient: str = "none", prune_self: bool = True,
                  max_items: int | None = None, emit: str | None = None,
-                 auto_rebalance_threshold: float | None = None):
+                 auto_rebalance_threshold: float | None = None,
+                 index: bool = True):
         if max_items is not None and max_items < 1:
             raise ValueError(f"max_items must be >= 1, got {max_items}")
         if auto_rebalance_threshold is not None \
@@ -2217,6 +2394,10 @@ class PartitionedEngineSession:
         #: dispatches re-attempted after a fault, across the session's life
         self.retries = 0
         self._closed = False
+        #: delta-incremental host planning (see :class:`EngineSession`)
+        self.use_index = bool(index)
+        self._pair_index: PairSpaceIndex | None = None
+        self._t_pair = self._t_merge = self._t_emit = 0.0
         self._install_full(g)
 
     # ---------------------------------------------------------- lifecycle
@@ -2275,8 +2456,15 @@ class PartitionedEngineSession:
         """(Re)partition ``g`` from scratch and make every shard
         device-resident (session open and :meth:`set_graph`)."""
         self._g = g
-        space = pair_space(g, orient=self.orient,
-                           prune_self=self.prune_self)
+        t0 = time.perf_counter()
+        if self.use_index:
+            self._pair_index = PairSpaceIndex(
+                g, orient=self.orient, prune_self=self.prune_self)
+            space = self._pair_index.space
+        else:
+            space = pair_space(g, orient=self.orient,
+                               prune_self=self.prune_self)
+        self._t_pair += time.perf_counter() - t0
         self._space = space
         self._full_items: int | None = None
         part = self._make_partition(space)
@@ -2446,13 +2634,14 @@ class PartitionedEngineSession:
         sp = self._shards[s].space
         cs = self.chunk_shape
         if self.emit == "device":
-            wins = (iter_descriptor_windows(sp.offsets, cs,
-                                            self.desc_shape,
-                                            self.num_anchors)
-                    if pair_ids is None else
-                    subset_descriptor_windows(sp, pair_ids, cs,
-                                              self.desc_shape,
-                                              self.num_anchors))
+            wins = _TimedIter(
+                iter_descriptor_windows(sp.offsets, cs,
+                                        self.desc_shape,
+                                        self.num_anchors)
+                if pair_ids is None else
+                subset_descriptor_windows(sp, pair_ids, cs,
+                                          self.desc_shape,
+                                          self.num_anchors))
             for win in wins:
                 if win.num_preprune == 0:
                     continue
@@ -2463,17 +2652,20 @@ class PartitionedEngineSession:
 
                 fut, poisoned = redo()
                 yield fut, poisoned, redo, None
+            self._t_emit += wins.seconds
             return
         if pair_ids is None:
             w0 = sp.num_items_preprune
-            batches = (emit_items(sp, lo, min(lo + cs, w0))
-                       for lo in range(0, w0, cs))
+            batches = _TimedIter(emit_items(sp, lo, min(lo + cs, w0))
+                                 for lo in range(0, w0, cs))
         else:
+            t0 = time.perf_counter()
             items = emit_items_for_pairs(sp, pair_ids)
-            batches = ((items[0][lo:lo + cs], items[1][lo:lo + cs],
-                        items[2][lo:lo + cs])
-                       for lo in range(0, max(int(items[0].shape[0]), 1),
-                                       cs))
+            self._t_emit += time.perf_counter() - t0
+            batches = _TimedIter(
+                (items[0][lo:lo + cs], items[1][lo:lo + cs],
+                 items[2][lo:lo + cs])
+                for lo in range(0, max(int(items[0].shape[0]), 1), cs))
         for batch in batches:
             num = int(batch[0].shape[0])
             if num == 0:
@@ -2485,6 +2677,7 @@ class PartitionedEngineSession:
 
             fut, poisoned = redo()
             yield fut, poisoned, redo, num
+        self._t_emit += batches.seconds
 
     def _job_stream(self, s: int, pair_ids=None):
         """Shard ``s``'s jobs tagged with their shard id (a bound helper,
@@ -2541,7 +2734,10 @@ class PartitionedEngineSession:
 
     def _postprune_items(self) -> int:
         if self._full_items is None:
-            self._full_items = self._space.num_items_postprune()
+            if self.use_index and self._pair_index is not None:
+                self._full_items = int(self._pair_index.costs.sum())
+            else:
+                self._full_items = self._space.num_items_postprune()
         return self._full_items
 
     def _set_stats(self, chunk_items, shard_items, items, full_items,
@@ -2570,7 +2766,11 @@ class PartitionedEngineSession:
             shard_items=shard_items,
             graph_resident_bytes=max(sh.resident_bytes
                                      for sh in self._shards),
-            graph_replicated_bytes=replicated_graph_bytes(self._space))
+            graph_replicated_bytes=replicated_graph_bytes(self._space),
+            host_pair_seconds=self._t_pair,
+            host_merge_seconds=self._t_merge,
+            host_emit_seconds=self._t_emit, indexed=self.use_index)
+        self._t_pair = self._t_merge = self._t_emit = 0.0
         self.engine.stats = self.stats
 
     def census(self) -> np.ndarray:
@@ -2630,12 +2830,16 @@ class PartitionedEngineSession:
         return contribution_counts(base_asym, base_mut, hist, inter), \
             dirty
 
-    def _refresh_shards(self, dirty, space_new, key_all_new) -> None:
+    def _refresh_shards(self, dirty, space_new, key_all_new,
+                        costs_new=None) -> None:
         """Re-extract + re-upload the dirty pair shards against the new
-        space; untouched shards keep their device buffers verbatim."""
-        # one global cost scan shared by every dirty shard's refresh
-        # (extract_shard would otherwise recount it per shard)
-        costs_new = postprune_pair_counts(space_new)
+        space; untouched shards keep their device buffers verbatim.
+        ``costs_new`` is the per-pair post-prune cost vector — the
+        maintained one from the session's index when available, else one
+        global scan shared by every dirty shard's refresh (extract_shard
+        would otherwise recount it per shard)."""
+        if costs_new is None:
+            costs_new = postprune_pair_counts(space_new)
         for s in dirty:
             ids = np.searchsorted(key_all_new, self._keys[s])
             self._shards[s] = extract_shard(space_new, ids, index=s,
@@ -2656,8 +2860,10 @@ class PartitionedEngineSession:
             raise RuntimeError(
                 "no baseline census: call census() before update()")
         cache0 = self._cache_size()
+        t0 = time.perf_counter()
         g_new, delta = apply_delta(self._g, add_src, add_dst,
                                    del_src, del_dst)
+        self._t_merge += time.perf_counter() - t0
         self.last_delta = delta
         if delta.num_changed == 0:
             self._set_stats([], [0] * self.ndev, 0,
@@ -2667,8 +2873,13 @@ class PartitionedEngineSession:
 
         n = self.n
         space_old = self._space
-        aff_old = affected_pair_ids(space_old, delta.touched)
+        t0 = time.perf_counter()
+        if self.use_index:
+            aff_old = self._pair_index.affected_pair_ids(delta.touched)
+        else:
+            aff_old = affected_pair_ids(space_old, delta.touched)
         aff_keys_old = (space_old.pair_u * n + space_old.pair_v)[aff_old]
+        self._t_pair += time.perf_counter() - t0
         chunk_items: list[int] = []
         shard_items = [0] * self.ndev
         touched_owner: dict[int, int] = {}
@@ -2678,11 +2889,23 @@ class PartitionedEngineSession:
 
         # ---- reassign ownership and refresh only the dirty shards
         self._g = g_new
-        space_new = pair_space(g_new, orient=self.orient,
-                               prune_self=self.prune_self)
+        t0 = time.perf_counter()
+        if self.use_index:
+            # edit the persistent index into the new pair space
+            # (O(delta · log P + affected)) instead of rebuilding O(P);
+            # its maintained keys/costs also feed the owner routing and
+            # the dirty-shard refresh below
+            space_new = self._pair_index.apply(delta, g_new)
+            key_all_new = self._pair_index.keys
+            costs_new = self._pair_index.costs
+        else:
+            space_new = pair_space(g_new, orient=self.orient,
+                                   prune_self=self.prune_self)
+            key_all_new = space_new.pair_u * n + space_new.pair_v
+            costs_new = None
+        self._t_pair += time.perf_counter() - t0
         self._space = space_new
         self._full_items = None
-        key_all_new = space_new.pair_u * n + space_new.pair_v
         dkeys = delta.pair_lo * n + delta.pair_hi
         vanished = dkeys[delta.new_code == 0]
         appeared = dkeys[delta.old_code == 0]
@@ -2717,12 +2940,18 @@ class PartitionedEngineSession:
                 okeys[s] = np.union1d(okeys[s],
                                       np.asarray(ks, np.int64))
                 dirty.add(s)
-        self._refresh_shards(sorted(dirty), space_new, key_all_new)
+        self._refresh_shards(sorted(dirty), space_new, key_all_new,
+                             costs_new)
 
         # ---- new-side recount (owners of every affected new pair are,
         # by construction, in the refreshed dirty set)
-        aff_new = affected_pair_ids(space_new, delta.touched)
+        t0 = time.perf_counter()
+        if self.use_index:
+            aff_new = self._pair_index.affected_pair_ids(delta.touched)
+        else:
+            aff_new = affected_pair_ids(space_new, delta.touched)
         aff_keys_new = key_all_new[aff_new]
+        self._t_pair += time.perf_counter() - t0
         contrib_new, _ = self._recount(
             aff_keys_new, chunk_items, shard_items)
         self._census = combine(self._census, contrib_old, contrib_new,
@@ -2795,11 +3024,16 @@ class PartitionedEngineSession2D(PartitionedEngineSession):
     def _ownership(self) -> list:
         return self._shard_keys
 
-    def _refresh_shards(self, dirty, space_new, key_all_new) -> None:
+    def _refresh_shards(self, dirty, space_new, key_all_new,
+                        costs_new=None) -> None:
         """Re-extract every vertex-slice tile of each dirty pair shard
         against the session's pinned slice bounds (one shard's tiles are
         a unit: the designated base-term slice of any of its pairs must
-        agree across them), then re-upload just those tiles."""
+        agree across them), then re-upload just those tiles.
+        ``costs_new`` (the 1D session's maintained global cost vector) is
+        ignored: tile costs are range-restricted per vertex slice, so
+        they are recomputed here — the index still supplies the space
+        itself, which is where the rebuild time went."""
         num_slices = self.mesh_shape[1]
         bounds = self._vertex_bounds
         terms = slice_pair_terms(space_new, bounds)

@@ -48,10 +48,17 @@ ItemRunner = Callable[[np.ndarray, np.ndarray, np.ndarray],
                       tuple[np.ndarray, np.ndarray]]
 
 
-def affected_pair_ids(space: PairSpace, touched) -> np.ndarray:
+def affected_pair_ids(space, touched) -> np.ndarray:
     """Indices of the pairs with an endpoint in ``touched`` — the pairs
     whose census contribution may differ after the delta (their item sets,
-    item codes, or closed-form terms read a changed row/degree)."""
+    item codes, or closed-form terms read a changed row/degree).
+
+    ``space`` may be a :class:`PairSpace` (O(P) mask scan — the oracle)
+    or a :class:`~repro.core.pair_index.PairSpaceIndex`, which answers
+    the same query in O(Σ deg(touched) · log P) from its touched-row
+    walk; results are identical."""
+    if hasattr(space, "affected_pair_ids"):   # a PairSpaceIndex
+        return space.affected_pair_ids(touched)
     touched = np.asarray(touched, dtype=np.int64).ravel()
     if touched.size == 0 or space.num_pairs == 0:
         return np.zeros(0, dtype=np.int64)
@@ -96,7 +103,7 @@ def subset_contribution(space: PairSpace, pair_ids: np.ndarray,
         num_items
 
 
-def subset_descriptor_windows(space: PairSpace, pair_ids: np.ndarray,
+def subset_descriptor_windows(space, pair_ids: np.ndarray,
                               max_items: int, desc_shape: int,
                               num_anchors: int):
     """Descriptor windows covering an arbitrary pair subset's item space —
@@ -108,7 +115,12 @@ def subset_descriptor_windows(space: PairSpace, pair_ids: np.ndarray,
     place (:func:`repro.core.census.census_partials_desc`), so the
     incremental path's host→device traffic shrinks with the same delta
     algebra and bit-identical results.
+
+    ``space`` may be a :class:`PairSpace` or a
+    :class:`~repro.core.pair_index.PairSpaceIndex` (its live space is
+    used — the windows it yields are bit-identical either way).
     """
+    space = getattr(space, "space", space)   # unwrap a PairSpaceIndex
     ids = np.asarray(pair_ids, dtype=np.int64).ravel()
     if ids.size and (ids.min() < 0 or ids.max() >= space.num_pairs):
         raise ValueError(f"pair id outside [0, {space.num_pairs})")

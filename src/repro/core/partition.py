@@ -495,7 +495,8 @@ class GraphPartition:
 def partition_graph(g: CompactDigraph | None = None, num_shards: int = 1,
                     orient: str = "none", prune_self: bool = True, *,
                     space: PairSpace | None = None,
-                    owner: np.ndarray | None = None) -> GraphPartition:
+                    owner: np.ndarray | None = None,
+                    costs: np.ndarray | None = None) -> GraphPartition:
     """Partition a graph's census work into ``num_shards`` private slices.
 
     Greedy LPT over the exact per-pair post-prune item counts, then
@@ -506,13 +507,23 @@ def partition_graph(g: CompactDigraph | None = None, num_shards: int = 1,
     with an explicit (P,) pair→shard assignment — the hook the skewed
     -schedule tests and benchmarks use to build deliberately imbalanced
     partitions (the census is exact for ANY assignment; only balance
-    changes).
+    changes).  ``costs`` supplies a precomputed (P,)
+    :func:`postprune_pair_counts` of ``space`` — the hook a maintained
+    :class:`~repro.core.pair_index.PairSpaceIndex` uses to skip the
+    O(P log m) recount on warm repartitions.
     """
     if space is None:
         if g is None:
             raise ValueError("need a graph or a prebuilt pair space")
         space = pair_space(g, orient=orient, prune_self=prune_self)
-    costs = postprune_pair_counts(space)
+    if costs is None:
+        costs = postprune_pair_counts(space)
+    else:
+        costs = np.asarray(costs, dtype=np.int64).ravel()
+        if costs.shape[0] != space.num_pairs:
+            raise ValueError(
+                f"costs has {costs.shape[0]} entries for "
+                f"{space.num_pairs} pairs")
     if owner is None:
         owner = lpt_assign(costs, num_shards)
     else:

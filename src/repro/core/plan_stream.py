@@ -94,9 +94,11 @@ class PlanChunker:
         if pad_to < 1:
             raise ValueError(f"pad_to must be >= 1, got {pad_to}")
         #: a prebuilt ``space`` (e.g. one shard's local pair space from
-        #: :mod:`repro.core.partition`) bypasses the graph decomposition —
-        #: the per-shard chunker; ``orient``/``prune_self`` are then the
-        #: space's own
+        #: :mod:`repro.core.partition`, or a live
+        #: :class:`~repro.core.pair_index.PairSpaceIndex`, unwrapped here)
+        #: bypasses the graph decomposition — the per-shard chunker;
+        #: ``orient``/``prune_self`` are then the space's own
+        space = getattr(space, "space", space)
         self.space: PairSpace = space if space is not None else \
             pair_space(g, orient=orient, prune_self=prune_self)
         w_pre = self.space.num_items_preprune

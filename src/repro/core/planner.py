@@ -233,7 +233,10 @@ def pair_space(g: CompactDigraph, orient: str = "none",
                            prune_self=prune_self)
 
 
-def postprune_pair_counts(space: PairSpace) -> np.ndarray:
+def postprune_pair_counts(space: PairSpace,
+                          pair_ids: np.ndarray | None = None,
+                          entry_key: np.ndarray | None = None
+                          ) -> np.ndarray:
     """Exact post-prune work items per pair, (P,) int64, without emitting.
 
     The closed form per pair: with self-pruning each pair loses its two
@@ -244,23 +247,36 @@ def postprune_pair_counts(space: PairSpace) -> np.ndarray:
     the globally sorted entry keys.  This is both the exact-W closed form
     (:meth:`PairSpace.num_items_postprune`) and the per-pair cost vector
     the partitioner's LPT balances (:mod:`repro.core.partition`).
+
+    ``pair_ids`` restricts the computation to a pair subset (result
+    aligned with ``pair_ids``), the hook the delta-incremental
+    :class:`~repro.core.pair_index.PairSpaceIndex` recounts only affected
+    pairs with — O(|subset| log m) searches instead of O(P log m); pass
+    the CSR's cached ``entry_key``
+    (:func:`repro.core.digraph.entry_keys`) to also skip the O(m) key
+    materialization the degree branch otherwise pays.
     """
     if space.num_pairs == 0:
-        return np.zeros(0, dtype=np.int64)
+        return np.zeros(0 if pair_ids is None else len(pair_ids),
+                        dtype=np.int64)
+    counts = space.counts if pair_ids is None else space.counts[pair_ids]
     if space.orient != "degree":
-        return space.counts - (2 if space.prune_self else 0)
-    rows = np.repeat(np.arange(space.n, dtype=np.int64),
-                     space.deg.astype(np.int64))
-    entry_key = rows * space.n + space.nbr.astype(np.int64)
-    pos_v_in_u = (np.searchsorted(entry_key,
-                                  space.pair_u * space.n + space.pair_v)
-                  - space.indptr[space.pair_u])
-    pos_u_in_v = (np.searchsorted(entry_key,
-                                  space.pair_v * space.n + space.pair_u)
-                  - space.indptr[space.pair_v])
-    deg_u = space.deg[space.pair_u].astype(np.int64)
-    deg_v = space.deg[space.pair_v].astype(np.int64)
-    inter = (space.pair_code >> INTER_SIDE_BIT) & 1
+        return counts - (2 if space.prune_self else 0)
+    pu = space.pair_u if pair_ids is None else space.pair_u[pair_ids]
+    pv = space.pair_v if pair_ids is None else space.pair_v[pair_ids]
+    code = (space.pair_code if pair_ids is None
+            else space.pair_code[pair_ids])
+    if entry_key is None:
+        rows = np.repeat(np.arange(space.n, dtype=np.int64),
+                         space.deg.astype(np.int64))
+        entry_key = rows * space.n + space.nbr.astype(np.int64)
+    pos_v_in_u = (np.searchsorted(entry_key, pu * space.n + pv)
+                  - space.indptr[pu])
+    pos_u_in_v = (np.searchsorted(entry_key, pv * space.n + pu)
+                  - space.indptr[pv])
+    deg_u = space.deg[pu].astype(np.int64)
+    deg_v = space.deg[pv].astype(np.int64)
+    inter = (code >> INTER_SIDE_BIT) & 1
     side0 = np.where(inter == 0, deg_u - 1, deg_u - pos_v_in_u - 1)
     side1 = np.where(inter == 1, deg_v - 1, deg_v - pos_u_in_v - 1)
     return side0 + side1

@@ -129,6 +129,11 @@ class TriadMonitor:
         update (``None`` — the engine default, ``"device"`` — stream
         O(affected pairs) descriptors and expand in-kernel, ``"host"`` —
         materialize items in numpy; bit-identical either way).
+    index : bool
+        keep a persistent :class:`~repro.core.pair_index.PairSpaceIndex`
+        in the resident session so each slide edits the pair space by
+        the delta instead of rebuilding it (default True; False is the
+        rebuild-from-scratch parity oracle).
     faults / max_retries / retry_backoff / watchdog_timeout : forwarded
         to the :class:`~repro.core.engine.CensusEngine` fault-tolerance
         layer.  A window whose census still fails after the retry budget
@@ -151,6 +156,7 @@ class TriadMonitor:
                  max_windows_per_dispatch: int =
                  MAX_WINDOWS_PER_DISPATCH,
                  auto_rebalance_threshold: float | None = None,
+                 index: bool = True,
                  faults=None, max_retries: int = 2,
                  retry_backoff: float = 0.01,
                  watchdog_timeout: float | None = None):
@@ -180,6 +186,7 @@ class TriadMonitor:
             raise ValueError(
                 "auto_rebalance_threshold requires partition=True")
         self.auto_rebalance_threshold = auto_rebalance_threshold
+        self.index = bool(index)
         self.engine = CensusEngine(
             mesh=mesh, backend=backend, partition=partition,
             schedule=schedule, pipeline_depth=pipeline_depth,
@@ -190,6 +197,10 @@ class TriadMonitor:
         self._session = None
         self._buf = np.zeros(0, dtype=np.int64)     # pending eid tail
         self._arcset: np.ndarray | None = None      # current window's arcs
+        #: multiplicity of each ``_arcset`` arc in the current window —
+        #: maintained incrementally so a slide diffs the window by its
+        #: O(stride) boundary batches instead of re-sorting all W edges
+        self._arcmult: np.ndarray | None = None
         self._censuses: list[np.ndarray] = []
         self._props: list[np.ndarray] = []
         self.window_stats: list[EngineStats] = []
@@ -306,7 +317,7 @@ class TriadMonitor:
         """Full census of a window (first window, tumbling slides, or
         incremental disabled)."""
         from repro.core.digraph import from_edges
-        arcs = np.unique(win)
+        arcs, mult = np.unique(win, return_counts=True)
         n = self.n_nodes
         g = from_edges(arcs // n, arcs % n, n=n)
         if self._session is None:
@@ -316,13 +327,55 @@ class TriadMonitor:
                     self.auto_rebalance_threshold
             self._session = self.engine.session(
                 g, orient=self.orient, max_items=self.max_items,
-                emit=self.emit, **kw)
+                emit=self.emit, index=self.index, **kw)
         else:
             self._session.set_graph(g)
         census = self._session.census()
         self._arcset = arcs
+        self._arcmult = mult
         self.window_stats.append(self._session.stats)
         return self._record(census)
+
+    def _slide_diff(self) -> tuple:
+        """Arc add/remove sets of the next slide plus the slid window's
+        (arcset, multiplicity) arrays, computed from the O(stride)
+        boundary batches — the ``stride`` edges leaving the window and
+        the ``stride`` edges entering it — instead of re-sorting all W
+        window edges (``np.unique`` + two ``setdiff1d``).  The window's
+        arc multiset is maintained in ``_arcset``/``_arcmult``; an arc
+        is removed only when its multiplicity drains to zero, added only
+        when it appears from zero — exactly the sets the old full diff
+        produced."""
+        w, s = self.window, self.stride
+        eids, mult = self._arcset, self._arcmult.copy()
+        lv, lc = np.unique(self._buf[:s], return_counts=True)
+        ev, ec = np.unique(self._buf[w:w + s], return_counts=True)
+        mult[np.searchsorted(eids, lv)] -= lc
+        pos = np.searchsorted(eids, ev)
+        safe = np.minimum(pos, eids.shape[0] - 1)
+        hit = (pos < eids.shape[0]) & (eids[safe] == ev)
+        mult[pos[hit]] += ec[hit]
+        add, add_mult = ev[~hit], ec[~hit]
+        dead = mult == 0
+        rem = eids[dead]
+        if dead.any() or add.size:
+            # splice out the drained arcs, splice in the new ones (same
+            # positional arithmetic as PairSpaceIndex.apply)
+            del_pos = np.nonzero(dead)[0]
+            ins_raw = pos[~hit]
+            ipos = ins_raw - np.searchsorted(del_pos, ins_raw)
+            keep = ~dead
+            j = np.arange(eids.shape[0] - del_pos.shape[0])
+            dest_surv = j + np.searchsorted(ipos, j, side="right")
+            dest_ins = ipos + np.arange(ipos.shape[0])
+            out_e = np.empty(j.shape[0] + ipos.shape[0], dtype=eids.dtype)
+            out_m = np.empty_like(out_e)
+            out_e[dest_surv] = eids[keep]
+            out_e[dest_ins] = add
+            out_m[dest_surv] = mult[keep]
+            out_m[dest_ins] = add_mult
+            eids, mult = out_e, out_m
+        return add, rem, eids, mult
 
     def _emit_slide(self, win: np.ndarray) -> np.ndarray:
         """Census of the next window, delta-updated when it overlaps the
@@ -331,13 +384,12 @@ class TriadMonitor:
         if self._force_full or not self.incremental \
                 or self.stride >= self.window:
             return self._emit_full(win)
-        arcs = np.unique(win)
-        add = np.setdiff1d(arcs, self._arcset, assume_unique=True)
-        rem = np.setdiff1d(self._arcset, arcs, assume_unique=True)
+        add, rem, arcs, mult = self._slide_diff()
         n = self.n_nodes
         census = self._session.update(add // n, add % n,
                                       rem // n, rem % n)
         self._arcset = arcs
+        self._arcmult = mult
         self.window_stats.append(self._session.stats)
         return self._record(census)
 

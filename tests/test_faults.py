@@ -377,6 +377,46 @@ class TestCheckpointResume:
         with pytest.raises(FileNotFoundError):
             eng.resume(g, "/nonexistent/run.ckpt", max_items=900)
 
+    def test_compact_checkpoint_resumes_identically(self, tmp_path, g,
+                                                    reference):
+        """Kill a run mid-stream, fold its journal, and resume from the
+        compacted form — same census, smaller file, and a second
+        compaction after completion leaves one record per shard."""
+        ck = str(tmp_path / "run.ckpt")
+        eng = CensusEngine(mesh=default_mesh(4), partition=True,
+                          schedule="async")
+        with pytest.raises(KeyboardInterrupt):
+            eng.run(g, max_items=900, checkpoint=ck, progress=_Killer(4))
+        info = CensusEngine.compact_checkpoint(ck)
+        assert info["records"] >= info["compacted"] >= 1
+        assert info["compacted_bytes"] == os.path.getsize(ck)
+        assert info["compacted_bytes"] <= info["bytes"]
+        eng2 = CensusEngine(mesh=default_mesh(4), partition=True,
+                           schedule="async")
+        got = eng2.resume(g, ck, max_items=900)
+        assert (got == reference["none"]).all()
+        assert eng2.stats.resumed_windows >= 1
+        # the completed journal (compacted snapshot + appended tail)
+        # compacts again and then resumes with zero dispatches
+        info2 = CensusEngine.compact_checkpoint(ck)
+        assert info2["compacted"] >= info["compacted"]
+        got2 = eng2.resume(g, ck, max_items=900)
+        assert (got2 == reference["none"]).all()
+        assert sum(eng2.stats.shard_steps) == 0
+
+    def test_compact_checkpoint_rejects_bad_journals(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            CensusEngine.compact_checkpoint(
+                str(tmp_path / "missing.ckpt"))
+        empty = tmp_path / "empty.ckpt"
+        empty.write_text("")
+        with pytest.raises(FaultError, match="empty"):
+            CensusEngine.compact_checkpoint(str(empty))
+        bad = tmp_path / "bad.ckpt"
+        bad.write_text('{"v": 99}\n')
+        with pytest.raises(FaultError, match="version"):
+            CensusEngine.compact_checkpoint(str(bad))
+
 
 # ----------------------------------------------------------- sessions
 

@@ -1,0 +1,314 @@
+"""Persistent pair-space index: delta edits vs the full-rebuild oracle.
+
+The central property: after ANY stream of deltas, the index's edited
+:class:`PairSpace` is bit-identical — array for array, dtype for dtype —
+to ``pair_space(g_new)`` rebuilt from scratch, its affected-pair answers
+match the O(P) scan, its maintained costs match a fresh recount, and a
+session opened with ``index=True`` produces the exact censuses of the
+``index=False`` oracle across emit modes and partition layouts.  Plus
+the corruption contract: a stale or externally-mutated index raises
+:class:`IndexCorruptionError` instead of planning from drifted state.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CensusEngine, IndexCorruptionError, PairSpaceIndex, apply_delta,
+    census_batagelj_mrvar, default_mesh, from_edges, pair_space,
+    subset_descriptor_windows)
+from repro.core.digraph import SplicePlan
+from repro.core.incremental import affected_pair_ids
+from repro.core.planner import postprune_pair_counts
+
+
+def random_graph(rng, n=None, p=None):
+    n = n or int(rng.integers(3, 40))
+    a = rng.random((n, n)) < (p or float(rng.uniform(0.05, 0.4)))
+    np.fill_diagonal(a, False)
+    return from_edges(*np.nonzero(a), n=n), a
+
+
+def random_arcs(rng, n, k):
+    return rng.integers(0, n, k), rng.integers(0, n, k)
+
+
+#: PairSpace array fields whose exact (value + dtype) equality defines
+#: "bit-identical to the rebuild"
+SPACE_ARRAYS = ("indptr", "packed", "nbr", "deg", "pair_u", "pair_v",
+                "pair_code", "counts", "offsets", "pair_term", "pair_mut")
+
+
+def assert_space_equal(got, want):
+    assert got.n == want.n
+    assert got.orient == want.orient
+    assert got.prune_self == want.prune_self
+    assert got.max_degree == want.max_degree
+    assert got.search_iters == want.search_iters
+    for name in SPACE_ARRAYS:
+        a, b = getattr(got, name), getattr(want, name)
+        assert a.dtype == b.dtype, f"{name}: {a.dtype} != {b.dtype}"
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def assert_index_matches_rebuild(index, g):
+    """Full parity bundle: space, affected ids, costs, self-check."""
+    want = pair_space(g, orient=index.space.orient,
+                      prune_self=index.space.prune_self)
+    assert_space_equal(index.space, want)
+    np.testing.assert_array_equal(index.costs,
+                                  postprune_pair_counts(want))
+    index.verify(g)
+
+
+# ------------------------------------------------------- delta-edit parity
+
+
+class TestSplicePlan:
+    def test_matches_delete_insert(self):
+        """The shared-permutation splice is exactly np.delete followed by
+        np.insert, for any mix of deletions and (possibly duplicated)
+        insertion points, including empty and fully-deleted arrays."""
+        rng = np.random.default_rng(5)
+        for _ in range(50):
+            num = int(rng.integers(0, 30))
+            arr = rng.integers(0, 1000, num)
+            n_del = int(rng.integers(0, num + 1))
+            del_pos = np.sort(rng.choice(num, n_del, replace=False)
+                              ).astype(np.int64) if num else \
+                np.zeros(0, np.int64)
+            ins_pos = np.sort(rng.integers(0, num + 1,
+                                           int(rng.integers(0, 6))))
+            vals = rng.integers(0, 1000, ins_pos.shape[0])
+            want = np.delete(arr, del_pos)
+            want = np.insert(want,
+                             ins_pos - np.searchsorted(del_pos, ins_pos),
+                             vals)
+            plan = SplicePlan(num, del_pos, ins_pos.astype(np.int64))
+            got = plan.splice(arr, vals)
+            assert got.dtype == arr.dtype
+            np.testing.assert_array_equal(got, want)
+            # surviving positions re-address to their post-splice slots
+            keep = np.setdiff1d(np.arange(num), del_pos)
+            if keep.size:
+                np.testing.assert_array_equal(
+                    got[plan.readdress(keep)], arr[keep])
+
+
+class TestIndexParity:
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    @pytest.mark.parametrize("seed", range(6))
+    def test_random_churn_stream(self, seed, orient):
+        """Adds + removes interleaved over many steps — the index never
+        drifts from the from-scratch rebuild."""
+        rng = np.random.default_rng(seed)
+        g, _ = random_graph(rng)
+        index = PairSpaceIndex(g, orient=orient)
+        for _ in range(6):
+            add = random_arcs(rng, g.n, int(rng.integers(0, 20)))
+            rem = random_arcs(rng, g.n, int(rng.integers(0, 20)))
+            g2, delta = apply_delta(g, *add, *rem)
+            space = index.apply(delta, g2)
+            assert space is index.space
+            assert_index_matches_rebuild(index, g2)
+            # affected-id parity against the O(P) oracle, both via the
+            # index method and via the dispatching module function
+            want_aff = affected_pair_ids(space, delta.touched)
+            np.testing.assert_array_equal(
+                index.affected_pair_ids(delta.touched), want_aff)
+            np.testing.assert_array_equal(
+                affected_pair_ids(index, delta.touched), want_aff)
+            g = g2
+
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    def test_hub_turnover(self, orient):
+        """Deleting and re-wiring a hub vertex churns a large fraction of
+        the pair space at once — the splice path's bulk case."""
+        rng = np.random.default_rng(99)
+        n = 30
+        src = np.concatenate([np.zeros(n - 1, np.int64),
+                              rng.integers(0, n, 40)])
+        dst = np.concatenate([np.arange(1, n, dtype=np.int64),
+                              rng.integers(0, n, 40)])
+        g = from_edges(src, dst, n=n)
+        index = PairSpaceIndex(g, orient=orient)
+        # retire hub 0 entirely, crown vertex 1 the new hub
+        g2, delta = apply_delta(
+            g, np.full(n - 2, 1), np.arange(2, n),
+            np.zeros(n - 1, np.int64), np.arange(1, n))
+        index.apply(delta, g2)
+        assert_index_matches_rebuild(index, g2)
+        # and tear the new hub down again
+        g3, delta3 = apply_delta(g2, [], [], np.full(n - 2, 1),
+                                 np.arange(2, n))
+        index.apply(delta3, g3)
+        assert_index_matches_rebuild(index, g3)
+
+    def test_empty_delta_is_noop(self):
+        g = from_edges([0, 1, 2], [1, 2, 0], n=5)
+        g2, delta = apply_delta(g, [0], [1])     # already present
+        assert g2 is g and delta.num_changed == 0
+        index = PairSpaceIndex(g)
+        space_before = index.space
+        assert index.apply(delta, g2) is space_before
+        assert_index_matches_rebuild(index, g)
+
+    def test_grow_from_empty_and_back(self):
+        """The structural edge cases: a graph with no arcs at all on
+        either side of the delta."""
+        g = from_edges([], [], n=6)
+        index = PairSpaceIndex(g)
+        assert index.space.num_pairs == 0
+        g2, delta = apply_delta(g, [0, 1, 4], [1, 2, 5])
+        index.apply(delta, g2)
+        assert_index_matches_rebuild(index, g2)
+        g3, delta3 = apply_delta(g2, [], [], [0, 1, 4], [1, 2, 5])
+        index.apply(delta3, g3)
+        assert index.space.num_pairs == 0
+        assert_index_matches_rebuild(index, g3)
+
+    def test_prebuilt_space_reuse(self):
+        g = from_edges([0, 1], [1, 2], n=4)
+        space = pair_space(g, orient="degree")
+        index = PairSpaceIndex(g, orient="degree", space=space)
+        assert index.space is space
+        with pytest.raises(ValueError):
+            PairSpaceIndex(g, orient="none", space=space)
+
+    def test_subset_descriptor_windows_accepts_index(self):
+        rng = np.random.default_rng(7)
+        g, _ = random_graph(rng, n=20, p=0.3)
+        index = PairSpaceIndex(g)
+        ids = np.arange(min(5, index.space.num_pairs))
+        via_index = list(subset_descriptor_windows(index, ids, 64, 8, 1))
+        via_space = list(subset_descriptor_windows(index.space, ids,
+                                                   64, 8, 1))
+        assert len(via_index) == len(via_space)
+        for a, b in zip(via_index, via_space):
+            assert (a.start, a.stop, a.num_descs) == \
+                (b.start, b.stop, b.num_descs)
+            np.testing.assert_array_equal(a.desc_pair, b.desc_pair)
+
+
+# ------------------------------------------------------------- corruption
+
+
+class TestCorruption:
+    def test_external_mutation_detected(self):
+        rng = np.random.default_rng(3)
+        g, _ = random_graph(rng, n=15, p=0.3)
+        index = PairSpaceIndex(g)
+        index.verify(g)
+        index.space.packed[0] ^= 1      # bit rot / external mutation
+        with pytest.raises(IndexCorruptionError):
+            index.verify()
+
+    def test_wrong_graph_detected(self):
+        rng = np.random.default_rng(4)
+        g1, _ = random_graph(rng, n=15, p=0.3)
+        g2, _ = random_graph(rng, n=15, p=0.3)
+        index = PairSpaceIndex(g1)
+        with pytest.raises(IndexCorruptionError):
+            index.verify(g2)
+
+    def test_stale_delta_detected(self):
+        """A delta computed against a DIFFERENT graph state must not be
+        silently applied — its old codes disagree with the tracked ones."""
+        rng = np.random.default_rng(5)
+        g, _ = random_graph(rng, n=15, p=0.3)
+        index = PairSpaceIndex(g)
+        g2, delta = apply_delta(g, *random_arcs(rng, g.n, 8))
+        index.apply(delta, g2)
+        with pytest.raises(IndexCorruptionError):
+            index.apply(delta, g2)       # applying the same delta twice
+
+    def test_key_cache_drift_detected(self):
+        g = from_edges([0, 1], [1, 2], n=4)
+        index = PairSpaceIndex(g)
+        index._keys = index._keys.copy()
+        index._keys[0] += 1
+        with pytest.raises(IndexCorruptionError):
+            index.verify()
+
+
+# ------------------------------------------------------- session parity
+
+#: pallas backends run interpret-mode kernels per dispatch on CPU — they
+#: sweep fewer delta steps than the pure-XLA backend
+SESSION_STEPS = {"jnp": 4, "pallas": 2, "pallas-fused": 2}
+
+
+def _delta_stream(rng, g, steps):
+    """Yield (add, rem) batches including an empty-churn step."""
+    for i in range(steps):
+        if i == 1:
+            yield ([], []), ([], [])      # empty delta mid-stream
+            continue
+        yield (random_arcs(rng, g.n, int(rng.integers(1, 10))),
+               random_arcs(rng, g.n, int(rng.integers(1, 10))))
+
+
+class TestSessionParity:
+    @pytest.mark.parametrize("emit", ["device", "host"])
+    @pytest.mark.parametrize("orient", ["none", "degree"])
+    def test_plain_session_matches_oracle(self, orient, emit):
+        """index=True census == index=False census == reference, every
+        step — the plain-session acceptance property."""
+        rng = np.random.default_rng(11)
+        g, _ = random_graph(rng, n=26, p=0.18)
+        engine = CensusEngine(backend="jnp")
+        live = engine.session(g, orient=orient, max_items=64, emit=emit,
+                              index=True)
+        oracle = engine.session(g, orient=orient, max_items=64, emit=emit,
+                                index=False)
+        np.testing.assert_array_equal(live.census(), oracle.census())
+        g_cur = g
+        for add, rem in _delta_stream(rng, g, 4):
+            got = live.update(*add, *rem)
+            want = oracle.update(*add, *rem)
+            np.testing.assert_array_equal(got, want)
+            # the maintained cost vector answers the post-prune item
+            # stat; it must equal the oracle's full recompute
+            assert live.stats.full_items == oracle.stats.full_items
+            g_cur, _ = apply_delta(g_cur, *add, *rem)
+        np.testing.assert_array_equal(got, census_batagelj_mrvar(g_cur))
+        assert live.stats.indexed and not oracle.stats.indexed
+
+    @pytest.mark.parametrize("mesh_shape", [None, (2, 2)])
+    def test_partitioned_session_matches_oracle(self, mesh_shape):
+        """1D (mesh_shape None) and 2D partitioned sessions: the index
+        routes owner shards identically to the rebuild path."""
+        rng = np.random.default_rng(13)
+        g, _ = random_graph(rng, n=24, p=0.2)
+        kw = (dict(partition_2d=mesh_shape) if mesh_shape
+              else dict(partition=True))
+        sessions = []
+        for index in (True, False):
+            engine = CensusEngine(mesh=default_mesh(4), backend="jnp",
+                                  **kw)
+            sessions.append(engine.session(g, max_items=64, index=index))
+        live, oracle = sessions
+        np.testing.assert_array_equal(live.census(), oracle.census())
+        g_cur = g
+        for add, rem in _delta_stream(rng, g, 3):
+            got = live.update(*add, *rem)
+            np.testing.assert_array_equal(got, oracle.update(*add, *rem))
+            assert live.stats.full_items == oracle.stats.full_items
+            g_cur, _ = apply_delta(g_cur, *add, *rem)
+        np.testing.assert_array_equal(got, census_batagelj_mrvar(g_cur))
+
+    def test_host_phase_timing_reported(self):
+        rng = np.random.default_rng(17)
+        g, _ = random_graph(rng, n=24, p=0.2)
+        session = CensusEngine(backend="jnp").session(g, max_items=64)
+        session.census()
+        assert session.stats.host_pair_seconds > 0        # space build
+        session.update(*random_arcs(rng, g.n, 5),
+                       *random_arcs(rng, g.n, 5))
+        st = session.stats
+        assert st.indexed
+        assert st.host_merge_seconds > 0                  # apply_delta
+        assert st.plan_host_seconds == pytest.approx(
+            st.host_pair_seconds + st.host_merge_seconds
+            + st.host_emit_seconds)
+        assert "host[" in st.summary()
